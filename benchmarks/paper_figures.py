@@ -1,0 +1,177 @@
+"""Paper-figure benchmarks (Figures 5a–f NVRAM, 6g–o DRAM).
+
+The container has no Optane, so wall-clock throughput is replaced by the
+calibrated cost model over *exact* instruction/flush/fence counts from the
+simulator (the counts are the mechanism behind the paper's speedups; the
+latency weights are Optane/DRAM literature values).  Derived throughput:
+
+    t_op      = reads·t_rd + writes·t_wr + cas·t_cas
+                + flushes·t_flush + fences·t_fence
+    agg(T)    = T / (t_op(T) )   with per-thread counts measured at
+                thread count T via the interleaving scheduler (contention
+                shows up as extra restarts/CASes, as on real hardware).
+
+Profiles (ns): NVRAM (Cascade Lake + Optane DC, clwb/sfence) and DRAM
+(AMD Opteron, clflush) — constants chosen from the paper's platform
+descriptions (§5.1) and public Optane latency measurements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bst import ExternalBST
+from repro.core.harris_list import HarrisList
+from repro.core.hash_table import HashTable
+from repro.core.pmem import PMem
+from repro.core.policies import get_policy
+from repro.core.scheduler import Interleaver
+from repro.core.skiplist import SkipList
+from repro.core.traversal import run_operation
+
+PROFILES = {
+    # t_read, t_write, t_cas, t_flush, t_fence  (ns)
+    "nvram": dict(rd=10.0, wr=15.0, cas=25.0, flush=250.0, fence=100.0),
+    "dram": dict(rd=8.0, wr=10.0, cas=20.0, flush=100.0, fence=60.0),
+}
+
+POLICIES = ("volatile", "izraelevitz", "nvtraverse")
+
+
+def op_time_ns(counters, profile) -> float:
+    p = PROFILES[profile]
+    c = counters
+    return (c.reads * p["rd"] + c.writes * p["wr"] + c.cas * p["cas"]
+            + c.flushes * p["flush"] + c.fences * p["fence"])
+
+
+def _make(structure, mem):
+    return {"list": lambda: HarrisList(mem),
+            "hash": lambda: HashTable(mem, n_buckets=64),
+            "bst": lambda: ExternalBST(mem),
+            "skiplist": lambda: SkipList(mem)}[structure]()
+
+
+def run_workload(structure: str, policy: str, *, size: int,
+                 update_pct: int, n_ops: int = 400, seed: int = 0,
+                 profile: str = "nvram") -> dict:
+    """Sequential cost measurement (single-thread counts)."""
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 19)
+    ds = _make(structure, mem)
+    pol = get_policy(policy)
+    keys = rng.permutation(2 * size)[:size]
+    for k in keys:
+        run_operation(ds, get_policy("nvtraverse"), "insert", (int(k), 1))
+    mem.persist_all()
+    mem.counters.reset()
+    for _ in range(n_ops):
+        r = rng.random()
+        k = int(rng.integers(0, 2 * size))
+        if r < update_pct / 200:
+            run_operation(ds, pol, "insert", (k, 1))
+        elif r < update_pct / 100:
+            run_operation(ds, pol, "delete", (k,))
+        else:
+            run_operation(ds, pol, "find", (k,))
+    t_ns = op_time_ns(mem.counters, profile) / n_ops
+    return {"t_op_us": t_ns / 1e3,
+            "mops_per_thread": 1e3 / t_ns,
+            "flushes_per_op": mem.counters.flushes / n_ops,
+            "fences_per_op": mem.counters.fences / n_ops}
+
+
+def run_threaded(structure: str, policy: str, *, size: int, threads: int,
+                 update_pct: int = 20, seed: int = 0,
+                 profile: str = "nvram") -> dict:
+    """Concurrent run: contention (restarts/extra CAS) measured via the
+    interleaver; throughput = threads / t_op(measured counts)."""
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 19)
+    ds = _make(structure, mem)
+    for k in rng.permutation(2 * size)[:size]:
+        run_operation(ds, get_policy("nvtraverse"), "insert", (int(k), 1))
+    mem.persist_all()
+    mem.counters.reset()
+    ops = []
+    n_ops = 8 * threads
+    for _ in range(n_ops):
+        r = rng.random()
+        k = int(rng.integers(0, 2 * size))
+        if r < update_pct / 200:
+            ops.append(("insert", (k, 1)))
+        elif r < update_pct / 100:
+            ops.append(("delete", (k,)))
+        else:
+            ops.append(("find", (k,)))
+    # `threads` ops in flight at a time
+    for i in range(0, n_ops, threads):
+        Interleaver(ds, get_policy(policy), ops[i:i + threads],
+                    seed=seed + i).run()
+    t_ns = op_time_ns(mem.counters, profile) / n_ops
+    return {"t_op_us": t_ns / 1e3,
+            "agg_mops": threads * 1e3 / t_ns}
+
+
+# ----------------------------------------------------------------------- #
+# one function per paper figure                                            #
+# ----------------------------------------------------------------------- #
+def fig5a_list_scalability(rows):
+    for threads in (1, 2, 4, 8):
+        for pol in POLICIES:
+            r = run_threaded("list", pol, size=256, threads=threads)
+            rows.append((f"fig5a,list,threads={threads},{pol}",
+                         r["t_op_us"], f"agg_mops={r['agg_mops']:.3f}"))
+
+
+def fig5b_list_size(rows):
+    for size in (128, 256, 1024, 4096):
+        for pol in POLICIES:
+            r = run_workload("list", pol, size=size, update_pct=20)
+            rows.append((f"fig5b,list,size={size},{pol}", r["t_op_us"],
+                         f"fences_per_op={r['fences_per_op']:.1f}"))
+
+
+def fig5c_list_updates(rows):
+    for upd in (0, 5, 20, 50, 100):
+        for pol in POLICIES:
+            r = run_workload("list", pol, size=256, update_pct=upd)
+            rows.append((f"fig5c,list,upd={upd},{pol}", r["t_op_us"],
+                         f"mops={r['mops_per_thread']:.3f}"))
+
+
+def _fig5_structure(rows, fig, structure, size=2048):
+    for upd in (0, 20, 50, 100):
+        for pol in POLICIES:
+            r = run_workload(structure, pol, size=size, update_pct=upd)
+            rows.append((f"{fig},{structure},upd={upd},{pol}",
+                         r["t_op_us"],
+                         f"flushes_per_op={r['flushes_per_op']:.1f}"))
+
+
+def fig5d_hash(rows):
+    _fig5_structure(rows, "fig5d", "hash")
+
+
+def fig5e_bst(rows):
+    _fig5_structure(rows, "fig5e", "bst")
+
+
+def fig5f_skiplist(rows):
+    _fig5_structure(rows, "fig5f", "skiplist", size=1024)
+
+
+def fig6_dram(rows):
+    """DRAM figures (6g–o): same sweeps under the DRAM cost profile."""
+    for structure, size in (("list", 1024), ("hash", 4096), ("bst", 4096),
+                            ("skiplist", 1024)):
+        for upd in (0, 20, 100):
+            for pol in POLICIES:
+                r = run_workload(structure, pol, size=size, update_pct=upd,
+                                 profile="dram")
+                rows.append((f"fig6,{structure},upd={upd},{pol}",
+                             r["t_op_us"],
+                             f"mops={r['mops_per_thread']:.3f}"))
+
+
+ALL_FIGURES = [fig5a_list_scalability, fig5b_list_size, fig5c_list_updates,
+               fig5d_hash, fig5e_bst, fig5f_skiplist, fig6_dram]

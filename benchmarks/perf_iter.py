@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# must precede all jax-importing code (see launch/dryrun.py)
+
+"""§Perf hillclimbing harness: measure one (cell × config-variant).
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --cell gemma3-27b:train_4k --tag sp_blocked \
+        --set attn_impl=blocked sp=true accum_constraint=true
+
+Runs the same dual-pass measurement as the dry-run (scanned memory pass +
+unrolled-L1/L2 cost pass) with the overridden config and appends the
+result to benchmarks/results/perf/<cell>__<tag>.json.  The roofline terms
+per variant feed the hypothesis→change→measure→validate log in
+EXPERIMENTS.md §Perf.
+"""
+import argparse
+import dataclasses as dc
+import json
+from pathlib import Path
+
+
+def coerce(cfg, key, val):
+    f = {f.name: f for f in dc.fields(cfg)}[key]
+    t = f.type if isinstance(f.type, type) else type(getattr(cfg, key))
+    if t is bool or isinstance(getattr(cfg, key), bool):
+        return val.lower() in ("1", "true", "yes")
+    if isinstance(getattr(cfg, key), int):
+        return int(val)
+    if isinstance(getattr(cfg, key), float):
+        return float(val)
+    return val
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)     # arch:shape
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--outdir", default="benchmarks/results/perf")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.launch import dryrun
+
+    arch, shape = args.cell.split(":")
+    cfg = registry.get_arch(arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = coerce(cfg, k, v)
+    cfg2 = dc.replace(cfg, **overrides)
+    registry.ARCHS[arch] = cfg2       # run_cell reads the registry
+    try:
+        rec = dryrun.run_cell(arch, shape, "single", Path(args.outdir))
+    finally:
+        registry.ARCHS[arch] = cfg
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    out = Path(args.outdir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{arch}__{shape}__{args.tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+    # quick roofline summary
+    from repro.roofline.analysis import analyze_cell
+    row = analyze_cell(rec)
+    if row:
+        print(json.dumps({k: row[k] for k in
+                          ("t_compute_s", "t_memory_s", "t_collective_s",
+                           "dominant", "roofline_fraction", "temp_gb",
+                           "args_gb")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

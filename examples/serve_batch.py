@@ -1,0 +1,54 @@
+"""Serving example: batched requests with a durable request log.
+
+Serves a batch of prompts against a reduced qwen2-7b-family model, crashes
+the engine mid-run, restarts it, and shows that committed results survive
+(exactly-once) while in-flight requests are transparently re-executed.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch, tiny
+from repro.models.model import build_model
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    cfg = tiny(get_arch("qwen2-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    requests = {i: rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+                for i in range(8)}
+
+    tmp = tempfile.mkdtemp(prefix="serve_")
+    try:
+        eng = ServeEngine(model, params, max_len=32, log_dir=tmp,
+                          batch_size=2)
+        print("serving 8 requests, crash injected after 2 batches...")
+        partial = eng.serve(requests, n_new=6, crash_after_batches=2)
+        print(f"  committed before crash: {sorted(partial)}")
+
+        print("restarting engine on the same log...")
+        eng2 = ServeEngine(model, params, max_len=32, log_dir=tmp,
+                           batch_size=2)
+        full = eng2.serve(requests, n_new=6)
+        print(f"  committed after recovery: {sorted(full)}")
+        assert set(full) == set(requests)
+        for rid in partial:
+            assert full[rid] == partial[rid], "committed result changed!"
+        print("\nfirst 3 generations:")
+        for rid in range(3):
+            print(f"  request {rid}: {full[rid]}")
+        print("\ncommitted results survived the crash unmodified; "
+              "in-flight requests were re-served exactly once ✓")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

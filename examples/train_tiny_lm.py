@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps with NVTraverse checkpointing, inject a crash, resume, and
+verify the trajectory matches an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.train import run_training
+import repro.launch.train as train_mod
+
+
+def arch_100m():
+    """~100M-parameter member of the qwen3 family."""
+    base = get_arch("qwen3-1.7b")
+    return dataclasses.replace(
+        base, n_layers=6, d_model=512, n_heads=8, n_kv_heads=4, d_head=64,
+        d_ff=1536, vocab=32000, param_dtype="float32",
+        compute_dtype="float32", microbatches=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--crash-at", type=int, default=None)
+    args = ap.parse_args()
+    crash_at = args.crash_at or args.steps // 2 + 3
+
+    cfg = arch_100m()
+    n = cfg.n_params()
+    print(f"arch: qwen3-family reduced, {n/1e6:.0f}M params, "
+          f"{args.steps} steps, crash at {crash_at}\n")
+
+    # register the custom config so run_training can find it
+    train_mod.parse_arch = lambda spec: cfg
+
+    tmp = tempfile.mkdtemp(prefix="train_tiny_")
+    try:
+        kw = dict(arch="custom", steps=args.steps, ckpt_every=25,
+                  global_batch=8, seq_len=128, seed=1)
+        print("— reference run (no crash) —")
+        ref = run_training(ckpt_dir=f"{tmp}/ref", **kw)
+        print(f"  final loss {ref['final_loss']:.4f}; "
+              f"fsync fences: {ref['io']['fences']}")
+
+        print(f"— crashed run (dies at step {crash_at}) —")
+        first = run_training(ckpt_dir=f"{tmp}/crash", crash_at=crash_at,
+                             **kw)
+        print(f"  crashed at step {first['crashed_at']}")
+
+        print("— resumed run —")
+        second = run_training(ckpt_dir=f"{tmp}/crash", **kw)
+        print(f"  {second['log'][0]}")
+        print(f"  final loss {second['final_loss']:.4f}")
+
+        drift = abs(second["final_loss"] - ref["final_loss"])
+        print(f"\ncrash-restart drift vs uninterrupted run: {drift:.2e}")
+        assert drift < 1e-5, "resumed trajectory diverged!"
+        assert ref["losses"][args.steps] < ref["losses"][1], "no learning?"
+        print("resumed training is bit-faithful to the uninterrupted run ✓")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

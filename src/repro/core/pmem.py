@@ -1,0 +1,214 @@
+"""Persistent-memory simulator — the substrate for the NVTraverse reproduction.
+
+Models the paper's memory system (Section 2, "Persistent memory"):
+
+  * two levels: a *volatile* view (cache) and a *persistent* image (NVRAM);
+  * all reads/writes hit the volatile view;
+  * a value reaches the persistent image either *explicitly* (flush of its
+    cache line followed by a fence) or *implicitly* (background cache
+    eviction, which may happen at any time and in any order);
+  * a crash loses the volatile view: every modification that was *pending*
+    (written but not persisted) at crash time MAY be lost — implicit eviction
+    means any subset of pending lines may have made it to NVRAM.
+
+The simulator is word-addressed with configurable cache-line grouping
+(``line_words``); flushes and evictions act on whole lines, matching
+``clwb``/eviction granularity on x86 and the paper's per-node flush counting
+(a node allocated within one line costs one flush).
+
+Adversary model for ``crash``: each line with pending words is independently
+either evicted (its *current volatile* words reach NVRAM) or dropped.  This
+covers the old-value/new-value outcomes relevant to CAS-based lock-free
+structures, where each location is written at most once per modification.
+(Intermediate-value outcomes from multiple unfenced writes to the *same word*
+are not modeled; the traversal structures here never rely on that case —
+node fields are written once before publication and pointers change by CAS.)
+
+This module is deliberately a small, mutable, numpy-backed machine: it is the
+*verification substrate* that the instruction interpreter, the interleaving
+scheduler and the durable-linearizability checker drive at single-instruction
+granularity.  The JAX-native, jittable durable structures built for the
+framework live in :mod:`repro.core.batched` and are cross-checked against
+this machine's accounting in the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+NULL = -1  # null "pointer" (node index)
+
+
+@dataclasses.dataclass
+class PMemCounters:
+    """Instruction accounting used by the paper-figure cost model."""
+
+    reads: int = 0
+    writes: int = 0
+    cas: int = 0
+    flushes: int = 0          # every explicit flush instruction issued
+    fences: int = 0
+    # flushes/fences attributed to the traversal phase (must stay 0 for
+    # NVTraverse structures — asserted in tests).
+    traverse_flushes: int = 0
+    traverse_fences: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+
+class PMem:
+    """Word-addressed two-level memory with explicit persistence.
+
+    Addresses are integers in ``[0, capacity)``.  Values are int64 words.
+    """
+
+    def __init__(self, capacity: int, line_words: int = 8,
+                 seed: Optional[int] = None):
+        if capacity % line_words:
+            capacity += line_words - capacity % line_words
+        self.capacity = capacity
+        self.line_words = line_words
+        self.volatile = np.zeros(capacity, dtype=np.int64)
+        self.persistent = np.zeros(capacity, dtype=np.int64)
+        # dirty: written since last persisted (the "pending" set, per word)
+        self.dirty = np.zeros(capacity, dtype=bool)
+        # flushed_line: a flush was issued for this line since the last fence
+        self.flushed_line = np.zeros(capacity // line_words, dtype=bool)
+        self.counters = PMemCounters()
+        self._rng = np.random.default_rng(seed)
+        self._crashed = False
+        # address 0 is reserved (packed null); allocations start at line 1
+        self._alloc_cursor = line_words
+
+    # ------------------------------------------------------------------ #
+    # basic instructions                                                  #
+    # ------------------------------------------------------------------ #
+    def read(self, addr: int) -> int:
+        self.counters.reads += 1
+        return int(self.volatile[addr])
+
+    def write(self, addr: int, value: int) -> None:
+        self.counters.writes += 1
+        self.volatile[addr] = value
+        self.dirty[addr] = True
+
+    def cas(self, addr: int, expected: int, new: int) -> bool:
+        """Atomic compare-and-swap on the volatile view."""
+        self.counters.cas += 1
+        if int(self.volatile[addr]) == expected:
+            self.volatile[addr] = new
+            self.dirty[addr] = True
+            return True
+        return False
+
+    # ------------------------------------------------------------------ #
+    # persistence instructions                                            #
+    # ------------------------------------------------------------------ #
+    def line_of(self, addr: int) -> int:
+        return addr // self.line_words
+
+    def flush(self, addr: int, *, in_traverse: bool = False) -> None:
+        """Issue a flush (clwb) for the line containing ``addr``.
+
+        The flush only *guarantees* persistence once a subsequent fence
+        executes; until then the line may still be dropped by a crash
+        (matching clwb + sfence semantics).
+        """
+        self.counters.flushes += 1
+        if in_traverse:
+            self.counters.traverse_flushes += 1
+        self.flushed_line[self.line_of(addr)] = True
+
+    def fence(self, *, in_traverse: bool = False) -> None:
+        """sfence: all lines flushed since the previous fence are persisted."""
+        self.counters.fences += 1
+        if in_traverse:
+            self.counters.traverse_fences += 1
+        lines = np.nonzero(self.flushed_line)[0]
+        for ln in lines:
+            lo, hi = ln * self.line_words, (ln + 1) * self.line_words
+            sel = self.dirty[lo:hi]
+            self.persistent[lo:hi][sel] = self.volatile[lo:hi][sel]
+            self.dirty[lo:hi] = False
+        self.flushed_line[:] = False
+
+    def persist_all(self) -> None:
+        """Test helper: persist everything (e.g. after prefill setup)."""
+        self.persistent[self.dirty] = self.volatile[self.dirty]
+        self.dirty[:] = False
+        self.flushed_line[:] = False
+
+    # ------------------------------------------------------------------ #
+    # crash semantics                                                     #
+    # ------------------------------------------------------------------ #
+    def dirty_lines(self) -> np.ndarray:
+        d = self.dirty.reshape(-1, self.line_words).any(axis=1)
+        return np.nonzero(d)[0]
+
+    def crash(self, evict: str | Iterable[int] = "random",
+              p_evict: float = 0.5) -> None:
+        """Simulate a full-system crash.
+
+        ``evict`` selects the implicit-eviction adversary:
+          * ``"none"``   — no pending line reached NVRAM (pure loss);
+          * ``"all"``    — every pending line happened to be evicted;
+          * ``"random"`` — each pending line independently evicted with
+            probability ``p_evict`` (the general adversary);
+          * an iterable of line indices — exact adversarial choice, used by
+            the exhaustive durable-linearizability checker.
+
+        Afterwards the volatile view is reloaded from the persistent image
+        (cache contents are gone).
+        """
+        lines = self.dirty_lines()
+        if isinstance(evict, str):
+            if evict == "none":
+                chosen = np.array([], dtype=np.int64)
+            elif evict == "all":
+                chosen = lines
+            elif evict == "random":
+                mask = self._rng.random(len(lines)) < p_evict
+                chosen = lines[mask]
+            else:  # pragma: no cover - guarded by tests
+                raise ValueError(f"unknown evict mode {evict!r}")
+        else:
+            chosen = np.asarray(sorted(set(evict)), dtype=np.int64)
+        for ln in chosen:
+            lo, hi = ln * self.line_words, (ln + 1) * self.line_words
+            sel = self.dirty[lo:hi]
+            self.persistent[lo:hi][sel] = self.volatile[lo:hi][sel]
+        # cache is lost; reload from NVRAM
+        self.volatile = self.persistent.copy()
+        self.dirty[:] = False
+        self.flushed_line[:] = False
+        self._crashed = True
+
+    # ------------------------------------------------------------------ #
+    # allocation                                                          #
+    # ------------------------------------------------------------------ #
+    # A bump allocator whose cursor is *volatile auxiliary state* in the
+    # paper's sense (Property 2): after a crash it is reconstructed by the
+    # recovery scan (see core/recovery.py), not persisted per allocation.
+    # Allocations are line-aligned so one node == one flushable unit.
+
+    def init_alloc(self, base: int) -> None:
+        self._alloc_cursor = base
+
+    def alloc(self, n_words: int) -> int:
+        lines = -(-n_words // self.line_words)
+        addr = self._alloc_cursor
+        self._alloc_cursor += lines * self.line_words
+        if self._alloc_cursor > self.capacity:
+            raise MemoryError("PMem pool exhausted")
+        return addr
+
+    @property
+    def alloc_cursor(self) -> int:
+        return self._alloc_cursor

@@ -1,0 +1,35 @@
+"""jit'd public wrapper: model-layout in/out, kernel or XLA-ref dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "pallas", interpret: bool = False,
+                    block_q: int = 128, block_k: int = 128):
+    """Model-layout flash attention.
+
+    q: [B, Sq, H, dh]; k/v: [B, Sk, K, dh] (GQA).  Returns [B, Sq, H, dh].
+    ``impl='pallas'`` uses the TPU kernel (``interpret=True`` for CPU
+    validation); ``impl='xla'`` runs the pure-jnp oracle.
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, dh)
+    if impl == "xla":
+        out = attention_ref(qh, kh, vh, causal=causal, window=window)
+    else:
+        out = flash_attention_kernel(qh, kh, vh, causal=causal,
+                                     window=window, block_q=block_q,
+                                     block_k=block_k, interpret=interpret)
+    return out.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [BH, Sq, d]; k/v: [BK, Sk, d]; GQA via BH % BK groups."""
+    BH, Sq, d = q.shape
+    BK, Sk, _ = k.shape
+    group = BH // BK
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys: zero output (kernel does the same)
+    any_visible = mask.any(axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+    out = jnp.where(any_visible[None, :, None], out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,81 @@
+"""NVTraverse batched hash-probe Pallas TPU kernel — the paper's hot loop.
+
+The paper's traversal is pointer-chasing over bucket chains; its entire
+point is that the journey does *zero* persistence work.  The TPU-native
+adaptation (DESIGN.md §2): pointer-chasing gathers are hostile to the VPU,
+so buckets are laid out as dense fixed-capacity rows ("bucket tiles") and
+the journey becomes a vectorized key-compare over a VMEM-resident tile —
+same read-only semantics, MXU/VPU-friendly layout.  The critical phase
+(CAS + flush + fence) stays on the host commit path (core/batched.py);
+this kernel is the read side of the split the paper formalizes.
+
+Inputs:
+  keys_tile [n_buckets, cap] int32 — bucket rows (0 = empty slot)
+  vals_tile [n_buckets, cap] int32
+  queries   [Q] int32
+Outputs:
+  found [Q] int32 (0/1), vals [Q] int32
+
+Grid: (Q/block_q,).  The whole bucket table is pinned in VMEM (the sizes
+the paper benchmarks fit comfortably: 4096 buckets × 128 slots × 4 B =
+2 MB); each program loads its query block, hashes in-kernel, and walks the
+tile row with dynamic-slice loads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix32(x):
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return (x ^ (x >> 16)).astype(jnp.uint32)
+
+
+def _kernel(keys_ref, vals_ref, q_ref, found_ref, val_ref, *,
+            n_buckets: int, block_q: int):
+    qs = q_ref[...]                                    # [block_q]
+
+    def body(i, _):
+        q = qs[i]
+        b = (_mix32(q) % jnp.uint32(n_buckets)).astype(jnp.int32)
+        row_k = pl.load(keys_ref, (pl.dslice(b, 1), slice(None)))  # [1,cap]
+        row_v = pl.load(vals_ref, (pl.dslice(b, 1), slice(None)))
+        hit = row_k == q                               # vectorized compare
+        found_ref[i] = hit.any().astype(jnp.int32)
+        val_ref[i] = jnp.where(hit, row_v, 0).sum().astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, block_q, body, 0)
+
+
+def nvt_probe_kernel(keys_tile, vals_tile, queries, *, block_q: int = 128,
+                     interpret: bool = False):
+    NB, cap = keys_tile.shape
+    Q = queries.shape[0]
+    block_q = min(block_q, Q)
+    assert Q % block_q == 0
+    kernel = functools.partial(_kernel, n_buckets=NB, block_q=block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // block_q,),
+        in_specs=[
+            pl.BlockSpec((NB, cap), lambda i: (0, 0)),   # whole table, VMEM
+            pl.BlockSpec((NB, cap), lambda i: (0, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys_tile, vals_tile, queries)

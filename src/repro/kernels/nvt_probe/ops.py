@@ -1,0 +1,27 @@
+"""jit'd wrapper for the NVTraverse probe kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import nvt_probe_kernel
+from .ref import probe_ref
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "block_q"))
+def nvt_probe(keys_tile, vals_tile, queries, *, impl: str = "pallas",
+              interpret: bool = False, block_q: int = 128):
+    """Batched read-only probe (the journey).  Returns (found, vals)."""
+    Q = queries.shape[0]
+    pad = (-Q) % block_q
+    q = jnp.pad(queries.astype(jnp.int32), (0, pad),
+                constant_values=-1)
+    if impl == "xla":
+        found, vals = probe_ref(keys_tile, vals_tile, q)
+    else:
+        found, vals = nvt_probe_kernel(keys_tile, vals_tile, q,
+                                       block_q=block_q,
+                                       interpret=interpret)
+    return found[:Q], vals[:Q]

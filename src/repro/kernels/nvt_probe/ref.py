@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for nvt_probe + converter from the chain-format map."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mix32_np(x):
+    x = np.asarray(x, np.uint32)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def mix32(x):
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def probe_ref(keys_tile, vals_tile, queries):
+    """Vectorized jnp reference: gather each query's bucket row, compare."""
+    NB = keys_tile.shape[0]
+    b = (mix32(queries) % jnp.uint32(NB)).astype(jnp.int32)
+    rows_k = keys_tile[b]                               # [Q, cap]
+    rows_v = vals_tile[b]
+    q = queries[:, None]
+    hit = rows_k == q
+    found = hit.any(axis=1).astype(jnp.int32)
+    vals = jnp.where(hit, rows_v, 0).sum(axis=1).astype(jnp.int32)
+    return found, vals
+
+
+def tiles_from_hashmap(state, n_buckets: int, cap: int):
+    """Convert a core.batched.HashMapState chain map into bucket tiles
+    (the TPU-native dense layout) — used to cross-check the kernel against
+    the chain-walking structure on identical contents."""
+    keys = np.asarray(state.key)
+    vals = np.asarray(state.val)
+    nxt = np.asarray(state.nxt)
+    live = np.asarray(state.live)
+    head = np.asarray(state.head)
+    kt = np.zeros((n_buckets, cap), np.int32)
+    vt = np.zeros((n_buckets, cap), np.int32)
+    for b in range(n_buckets):
+        node, slot = head[b], 0
+        while node != 0:
+            if live[node]:
+                assert slot < cap, "bucket overflow in tile conversion"
+                kt[b, slot] = keys[node]
+                vt[b, slot] = vals[node]
+                slot += 1
+            node = nxt[node]
+    return jnp.asarray(kt), jnp.asarray(vt)

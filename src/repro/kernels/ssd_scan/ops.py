@@ -1,0 +1,43 @@
+"""jit'd wrapper: model layout ↔ kernel layout + impl dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+from .ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd_scan(xh, dt, A, Bm, Cm, *, chunk: int = 128, impl: str = "pallas",
+             interpret: bool = False):
+    """Model layout: xh [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (<0);
+    Bm/Cm [B,S,N] (one group, broadcast across heads).  Returns [B,S,H,P].
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    C = Sp // chunk
+
+    # [B,S,H,P] -> [B,H,S,P] -> [BH, C, Q, P]
+    xk = xh.transpose(0, 2, 1, 3).reshape(B * H, C, chunk, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B * H, C, chunk)
+    # per-program head decay: programs are ordered b*H + h, so tile A B times
+    dAk = dtk * jnp.tile(A, (B,))[:, None, None]
+    bk = jnp.repeat(Bm[:, None], H, axis=1).reshape(B * H, C, chunk, N)
+    ck = jnp.repeat(Cm[:, None], H, axis=1).reshape(B * H, C, chunk, N)
+
+    if impl == "xla":
+        y = ssd_ref(xk, dtk, dAk, bk, ck)
+    else:
+        y = ssd_scan_kernel(xk, dtk, dAk, bk, ck, interpret=interpret)
+    y = y.reshape(B, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    return y

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the sequential
+state-space recurrence (the definitionally-correct form).
+
+    s_t = exp(dA_t) * s_{t-1} + dt_t * B_t ⊗ x_t
+    y_t = C_t · s_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh, dt, dA, Bm, Cm):
+    """Same layout as the kernel: xh [BH,C,Q,P], dt/dA [BH,C,Q],
+    Bm/Cm [BH,C,Q,N] → y [BH,C,Q,P]."""
+    BH, C, Q, P = xh.shape
+    N = Bm.shape[-1]
+    x = xh.reshape(BH, C * Q, P).astype(jnp.float32)
+    dt_ = dt.reshape(BH, C * Q).astype(jnp.float32)
+    dA_ = dA.reshape(BH, C * Q).astype(jnp.float32)
+    B_ = Bm.reshape(BH, C * Q, N).astype(jnp.float32)
+    C_ = Cm.reshape(BH, C * Q, N).astype(jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, dat, bt, ct = inp
+        s = jnp.exp(dat)[:, None, None] * s + \
+            dtt[:, None, None] * (xt[:, :, None] * bt[:, None, :])
+        y = jnp.einsum("bn,bpn->bp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, s0,
+                         (x.swapaxes(0, 1), dt_.T, dA_.T,
+                          B_.swapaxes(0, 1), C_.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(BH, C, Q, P)
+    return y.astype(xh.dtype)

@@ -1,0 +1,165 @@
+"""Dry-run cell construction: (arch × shape × mesh) → a jit-able step
+function + ShapeDtypeStruct inputs + in/out shardings.
+
+A *cell* lowers exactly what the assignment specifies:
+  * ``train_*``   → ``train_step`` (grad-accum scan + optimizer update);
+  * ``prefill_*`` → forward over the prompt, logits + KV caches out;
+  * ``decode_*`` / ``long_*`` → ``serve_step`` (ONE new token against a
+    KV cache of seq_len).
+
+ShapeDtypeStructs only — no device allocation ever happens here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, ShapeConfig
+from ..configs.registry import get_arch
+from ..models.model import build_model
+from ..sharding import specs as SH
+from ..training.optimizer import make_optimizer
+from ..training.train_loop import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_structs(cfg, B: int, S: int, *, train: bool):
+    """Model input batch (token count S; +1 labels column for training)."""
+    cols = S + 1 if train else S
+    batch = {"tokens": _sds((B, cols), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["vis"] = _sds((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _batch_shardings(cfg, mesh, batch_structs, B, *, microbatched=False):
+    def sh(leaf):
+        spec = SH.batch_spec(
+            mesh, B, rank=len(leaf.shape) - (1 if microbatched else 0))
+        if microbatched:   # [M, B/M, ...]: DP shard rides on dim 1
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(sh, batch_structs)
+
+
+def make_cell(arch_name, shape_name, mesh: Mesh) -> Cell:
+    """arch_name/shape_name may be names or (ArchConfig, ShapeConfig)
+    instances (the dry-run cost pass passes reduced-depth overrides)."""
+    cfg = get_arch(arch_name) if isinstance(arch_name, str) else arch_name
+    shape = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    if shape.kind == "prefill" and getattr(cfg, "sp_prefill", False) \
+            and not cfg.sp:
+        cfg = dataclasses.replace(cfg, sp=True)   # §Perf B3: fwd-only SP
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    key_struct = _sds((2,), jnp.uint32)
+    params_struct = jax.eval_shape(model.init, key_struct)
+    # inference cells store params without the ZeRO axis (no optimizer
+    # state to shard; kills the per-layer param all-gathers — §Perf B4) —
+    # guarded: only when the model-sharded copy fits comfortably per chip
+    # (arctic-480b at 960GB/16 = 60GB per chip must stay ZeRO-sharded).
+    import numpy as _np
+    param_bytes = sum(int(_np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(params_struct))
+    per_chip_replicated = param_bytes / mesh.shape["model"]
+    infer = shape.kind != "train" and per_chip_replicated < 6e9
+    params_sh = SH.params_shardings(params_struct, cfg, mesh, infer=infer)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        opt_sh = SH.params_shardings(opt_struct, cfg, mesh)
+        batch = _batch_structs(cfg, B, S, train=True)
+        M = max(1, cfg.microbatches)
+        if M > 1:   # pre-shaped [M, B/M, ...]; dim 1 carries the DP shard
+            batch = jax.tree.map(
+                lambda l: _sds((M, l.shape[0] // M) + l.shape[1:], l.dtype),
+                batch)
+        batch_sh = _batch_shardings(cfg, mesh, batch, B // M,
+                                    microbatched=(M > 1))
+        step_struct = _sds((), jnp.int32)
+        train_step = make_train_step(model, cfg, opt)
+        repl = NamedSharding(mesh, P())
+        return Cell(
+            arch=cfg, shape=shape, fn=train_step,
+            args=(params_struct, opt_struct, batch, step_struct),
+            in_shardings=(params_sh, opt_sh, batch_sh, repl),
+            out_shardings=(params_sh, opt_sh, {"loss": repl}),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch = _batch_structs(cfg, B, S, train=False)
+        batch_sh = _batch_shardings(cfg, mesh, batch, B)
+        max_len = S + (cfg.vis_tokens if cfg.family == "vlm" else 0)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        return Cell(
+            arch=cfg, shape=shape, fn=prefill_fn,
+            args=(params_struct, batch),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None,       # compiler-chosen for prefill outputs
+        )
+
+    # decode / long-context decode: serve_step (one token, cache of len S)
+    caches_struct = jax.eval_shape(lambda: model.init_caches(B, S))
+    caches_sh = SH.caches_shardings(cfg, mesh, B)
+    tokens_struct = _sds((B,), jnp.int32)
+    tok_spec = SH.batch_spec(mesh, B, rank=1)
+    repl = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(
+        mesh, P(tok_spec[0], None,
+                "model" if _vocab_divisible(cfg, mesh) else None))
+
+    def serve_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+
+    return Cell(
+        arch=cfg, shape=shape, fn=serve_step,
+        args=(params_struct, tokens_struct, caches_struct,
+              _sds((), jnp.int32)),
+        in_shardings=(params_sh, NamedSharding(mesh, tok_spec),
+                      caches_sh, repl),
+        out_shardings=(logits_sh, caches_sh),
+        donate_argnums=(2,),
+    )
+
+
+def _vocab_divisible(cfg, mesh) -> bool:
+    from ..models.model import padded_vocab
+    return padded_vocab(cfg) % mesh.shape["model"] == 0
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """lower() the cell inside its mesh context (also registers the mesh
+    with the activation-constraint hooks in sharding/constraints.py)."""
+    from ..sharding.constraints import use_mesh
+    with mesh, use_mesh(mesh):
+        jitted = jax.jit(cell.fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.args)

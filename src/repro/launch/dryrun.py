@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  This module is the ONLY place the 512
+# placeholder devices exist; tests and benches see the real device count.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input-shape × mesh) cell:
+    lowered  = jax.jit(step, in_shardings, out_shardings).lower(*specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective-bytes(HLO) → JSON
+
+Meshes: single-pod (16, 16) ("data","model") and multi-pod (2, 16, 16)
+("pod","data","model") — 512 chips.  The multi-pod pass proves the "pod"
+axis shards; the roofline table (EXPERIMENTS.md §Roofline) reads the
+single-pod JSONs.
+
+Usage:
+    python -m repro.launch.dryrun --cells all --mesh both
+    python -m repro.launch.dryrun --cells gemma3-27b:train_4k --mesh single
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum collective bytes from the post-SPMD optimized HLO.
+
+    Shapes in the partitioned module are PER-DEVICE.  Bytes-on-the-wire
+    model (ring algorithms, n >> 1): all-gather ≈ result bytes;
+    reduce-scatter ≈ operand bytes ≈ result×n/n; all-reduce ≈ 2× operand;
+    all-to-all / collective-permute ≈ operand bytes.
+    """
+    dtb = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+           "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+           "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+    ops = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+    pat = re.compile(
+        r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+        r"all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)\(")
+    out = {k: {"count": 0, "bytes": 0.0} for k in ops}
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        if dt not in dtb:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op]["count"] += 1
+        out[op]["bytes"] += n * dtb[dt] * ops[op]
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _compile_once(cfg, shape, mesh):
+    from repro.launch.cells import make_cell, lower_cell
+    t0 = time.time()
+    compiled = lower_cell(make_cell(cfg, shape, mesh), mesh).compile()
+    return compiled, round(time.time() - t0, 1)
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    out = {k: float(v) for k, v in cost.items()
+           if isinstance(v, (int, float))
+           and ("flops" in k or "bytes" in k)}
+    out["collectives"] = parse_collectives(compiled.as_text())
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             outdir: Path, *, cost_pass: bool = True) -> dict:
+    """Dual-pass dry-run for one cell.
+
+    * memory pass — scanned stacks, full depth: the deployable program.
+      ``memory_analysis()`` proves the per-device footprint; this is also
+      the lower+compile that MUST succeed for deliverable (e).
+    * cost pass (single-pod only) — XLA's cost analysis counts while-loop
+      bodies once, so scanned numbers undercount by ~n_layers.  The cost
+      pass lowers the stack UNROLLED at two reduced depths L1 < L2 (one
+      and two pattern-periods) and extrapolates linearly to full depth
+      (layers are homogeneous), then scales by the microbatch count for
+      train cells.  Raw L1/L2 numbers are recorded alongside.
+    """
+    import dataclasses as dc
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind}
+    if shape_name in cfg.skip_shapes:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §4)")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec["n_devices"] = int(mesh.devices.size)
+
+    # ---- memory pass ---------------------------------------------------- #
+    compiled, secs = _compile_once(cfg, shape, mesh)
+    rec["compile_s"] = secs
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits (per-device bytes)
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    rec["scanned_cost"] = _cost_of(compiled)
+    del compiled
+
+    # ---- cost pass (single-pod roofline numbers) ------------------------ #
+    if cost_pass and mesh_kind == "single":
+        period = max(cfg.shared_attn_every,
+                     cfg.local_per_global + 1 if cfg.local_per_global else 0,
+                     2)
+        L1, L2 = period, 2 * period
+        M = max(1, cfg.microbatches) if shape.kind == "train" else 1
+        sh1 = (dc.replace(shape, global_batch=shape.global_batch // M)
+               if M > 1 else shape)
+        raws = {}
+        for L in (L1, L2):
+            c = dc.replace(cfg, n_layers=L, scan_layers=False,
+                           microbatches=1,
+                           enc_layers=L if cfg.enc_layers else 0)
+            compiled, secs = _compile_once(c, sh1, mesh)
+            raws[L] = _cost_of(compiled)
+            raws[L]["compile_s"] = secs
+            del compiled
+        rec["cost_raw"] = {str(k): v for k, v in raws.items()}
+
+        def extrap(key_fn):
+            c1, c2 = key_fn(raws[L1]), key_fn(raws[L2])
+            delta = (c2 - c1) / (L2 - L1)
+            return (c1 + delta * (cfg.n_layers - L1)) * M
+
+        rec["cost"] = {
+            "flops": extrap(lambda r: r.get("flops", 0.0)),
+            "bytes_accessed": extrap(lambda r: r.get("bytes accessed", 0.0)),
+            "collective_bytes": extrap(
+                lambda r: r["collectives"]["total_bytes"]),
+            "collective_detail": {
+                op: extrap(lambda r, op=op: r["collectives"][op]["bytes"])
+                for op in ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute")},
+            "method": f"unrolled L1={L1},L2={L2} linear extrapolation, xM={M}",
+        }
+        print({k: v for k, v in rec["cost"].items() if k != "collective_detail"})
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="all",
+                    help="'all' or comma-separated arch:shape pairs")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    if args.cells == "all":
+        wanted = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+    else:
+        wanted = [tuple(c.split(":")) for c in args.cells.split(",")]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    failures = 0
+    for arch, shape in wanted:
+        for mk in meshes:
+            name = f"{arch}__{shape}__{mk}"
+            path = outdir / f"{name}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {name}: cached ({prev['status']})")
+                    continue
+            print(f"[dryrun] {name}: lowering...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mk, outdir)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                failures += 1
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[dryrun] {name}: {rec['status']} "
+                  f"(lower {rec.get('lower_s', '-')}s, "
+                  f"compile {rec.get('compile_s', '-')}s)", flush=True)
+    print(f"[dryrun] done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Modality frontend STUBS (per the assignment brief).
+
+``[audio]`` (whisper) and ``[vlm]`` (internvl2) specify the transformer
+BACKBONE only; the conv/ViT frontends are stubs: ``input_specs()`` (and the
+synthetic generators here) provide precomputed frame / patch embeddings of
+the correct shape and dtype.  A production deployment would plug the real
+frontend in ahead of these tensors; nothing in the backbone, sharding or
+serving path depends on how they were produced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synth_audio_frames(key, batch: int, cfg, dtype=jnp.bfloat16):
+    """Stub for whisper's conv1d+GELU frontend: [B, enc_seq, d_model]."""
+    return jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model), dtype)
+
+
+def synth_vision_patches(key, batch: int, cfg, dtype=jnp.bfloat16):
+    """Stub for InternViT: [B, vis_tokens, d_model] patch embeddings."""
+    return jax.random.normal(key, (batch, cfg.vis_tokens, cfg.d_model), dtype)

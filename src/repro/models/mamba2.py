@@ -1,0 +1,189 @@
+"""Mamba2 block — SSD (state-space duality), chunked matmul form.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks of Q tokens: within a chunk the recurrence is computed as a masked
+attention-like GEMM (MXU-friendly), across chunks a small state
+[H, P, N] is carried by a scan — exactly the TPU-native formulation (the
+hardware-adaptation of the CUDA selective-scan in DESIGN.md).  The
+``ssd_scan`` Pallas kernel implements the same chunk computation; this
+module is its pure-jnp reference and the XLA path used by the dry-run.
+
+Block layout (Mamba2 paper):
+  in_proj → [z (gate), xBC (conv features), dt] ; causal depthwise conv on
+  xBC ; SSD ; gated RMSNorm ; out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array        # [B, H, P, N] carried SSD state
+    conv: jax.Array         # [B, ck-1, conv_dim] conv tail
+
+
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def mamba_params(key, cfg, dtype):
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    cdim = _conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((D,), dtype),               # pre-norm (residual)
+        # in_proj emits [z (di), xBC (cdim), dt (H)]
+        "in_proj": dense_init(ks[0], (D, di + cdim + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, cdim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, D), dtype, scale=di ** -0.5),
+    }
+
+
+def _split_proj(p, x, cfg):
+    """in_proj → z [B,S,di], xBC [B,S,cdim], dt [B,S,H]."""
+    di, H = cfg.d_inner, cfg.ssm_heads
+    cdim = _conv_dim(cfg)
+    u = jnp.einsum("bsd,dn->bsn", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt = jnp.split(u, [di, di + cdim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, u: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv (kernel ck) via shift-and-add.
+
+    u: [B,S,cdim]; tail: [B,ck-1,cdim] previous inputs (decode) or None
+    (train: zero history).  Returns (y, new_tail)."""
+    w = p["conv_w"].astype(u.dtype)                 # [ck, cdim]
+    ck = w.shape[0]
+    B, S, cdim = u.shape
+    if tail is None:
+        tail = jnp.zeros((B, ck - 1, cdim), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)        # [B, S+ck-1, cdim]
+    y = sum(ext[:, i:i + S, :] * w[i] for i in range(ck))
+    y = jax.nn.silu(y + p["conv_b"].astype(u.dtype))
+    return y, ext[:, -(ck - 1):, :]
+
+
+def _segsum_exp(cum: jax.Array) -> jax.Array:
+    """exp(cum_i - cum_j) for j <= i else 0.  cum: [..., Q]."""
+    diff = cum[..., :, None] - cum[..., None, :]
+    Q = cum.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD.  xh: [B,S,H,P]; dt: [B,S,H] (post-softplus);
+    A: [H] (negative); Bm/Cm: [B,S,N] (one group).
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    C_ = Sp // Q
+
+    f32 = jnp.float32
+    xh_ = xh.reshape(B, C_, Q, H, P)
+    dt_ = dt.reshape(B, C_, Q, H).astype(f32)
+    Bm_ = Bm.reshape(B, C_, Q, N)
+    Cm_ = Cm.reshape(B, C_, Q, N)
+
+    dA = dt_ * A[None, None, None, :]               # [B,C,Q,H] (<= 0)
+    cum = jnp.cumsum(dA, axis=2)                    # inclusive
+    # intra-chunk: masked attention-like term
+    L = _segsum_exp(jnp.moveaxis(cum, -1, 2))       # [B,C,H,Q,Q]
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm_.astype(f32), Bm_.astype(f32))
+    scores = cb[:, :, None] * L * dt_.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores.astype(xh.dtype),
+                         xh_)
+
+    # chunk-local final states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # [B,C,Q,H]
+    sloc = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                      (decay_to_end * dt_).astype(xh.dtype), Bm_, xh_)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # [B,C,H]
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), xh.dtype)
+
+    def step(carry, inp):
+        dec, s_local = inp                  # dec [B,H], s_local [B,H,P,N]
+        before = carry
+        carry = carry * dec[..., None, None].astype(carry.dtype) + s_local
+        return carry, before
+
+    final, before = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sloc, 1, 0)))
+    before = jnp.moveaxis(before, 0, 1)                          # [B,C,H,P,N]
+
+    y_inter = (jnp.einsum("bcqn,bchpn->bcqhp", Cm_, before)
+               * jnp.exp(cum)[..., None].astype(xh.dtype))
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    return y, final
+
+
+def mamba_block(p: dict, x: jax.Array, cfg, *,
+                cache: Optional[SSMCache] = None):
+    """Full Mamba2 block.  x: [B,S,D].  Returns (y, new_cache)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    z, xBC, dtr = _split_proj(p, x, cfg)
+    xBC, new_tail = _causal_conv(p, xBC, cache.conv if cache else None)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + cfg.ssm_groups * cfg.ssm_state],
+                           axis=-1)
+    xh = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        new_cache = None
+    elif S == 1:
+        # recurrent decode step
+        dA = jnp.exp(dt[:, 0] * A[None, :])          # [B,H]
+        st = cache.state * dA[..., None, None].astype(cache.state.dtype)
+        st = st + jnp.einsum("bh,bhp,bn->bhpn",
+                             dt[:, 0].astype(x.dtype), xh[:, 0], Bm[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], st)[:, None]    # [B,1,H,P]
+        final = st
+        new_cache = SSMCache(state=final, conv=new_tail)
+    else:
+        # chunked prefill with state carry-in
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                               init_state=cache.state)
+        new_cache = SSMCache(state=final, conv=new_tail)
+
+    y = y + (p["D"].astype(x.dtype)[None, None, :, None] * xh)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsn,nd->bsd", y, p["out_proj"].astype(x.dtype))
+    if cache is None:
+        return out, None
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dtype))

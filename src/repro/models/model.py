@@ -1,0 +1,257 @@
+"""Unified model API over all assigned families.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    loss   = model.loss(params, batch)              # train step body
+    logits, caches = model.prefill(params, batch, max_len)
+    logits, caches = model.decode_step(params, tokens, caches, pos)
+
+Batch conventions (matching ``input_specs`` in launch/dryrun.py):
+  * lm (dense/moe/ssm/hybrid):  {"tokens": int32[B, S+1]}
+  * encdec (whisper):  {"frames": f[B, Se, D] (conv-stub output),
+                        "tokens": int32[B, S+1]}
+  * vlm (internvl):    {"vis": f[B, Tv, D] (ViT-stub output),
+                        "tokens": int32[B, S+1]}  (loss on text only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from .layers import dense_init, rms_norm
+from .mamba2 import mamba_params
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up to a multiple of 128 so the embedding/logits dim
+    shards evenly over the model axis (padded logits are masked out)."""
+    return -(-cfg.vocab // 128) * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: object
+
+    # ------------------------------------------------------------------ #
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        D, V = cfg.d_model, padded_vocab(cfg)
+        params = {
+            "embed": dense_init(ks[0], (V, D), dt, scale=1.0),
+            "final_norm": jnp.zeros((D,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], (D, V), dt)
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            params["blocks"] = T.stacked_params(
+                ks[2], cfg.n_layers, T.dense_block_params, cfg, dt)
+        elif fam == "moe":
+            params["blocks"] = T.stacked_params(
+                ks[2], cfg.n_layers, T.moe_block_params, cfg, dt)
+        elif fam == "ssm":
+            params["blocks"] = T.stacked_params(
+                ks[2], cfg.n_layers,
+                lambda k, c, d: mamba_params(k, c, d), cfg, dt)
+        elif fam == "hybrid":
+            params["blocks"] = {
+                "mamba": T.stacked_params(
+                    ks[2], cfg.n_layers,
+                    lambda k, c, d: mamba_params(k, c, d), cfg, dt),
+                "shared": T.dense_block_params(ks[3], cfg, dt),
+            }
+        elif fam == "encdec":
+            params["encoder"] = T.stacked_params(
+                ks[2], cfg.enc_layers, T.dense_block_params, cfg, dt)
+            params["enc_pos"] = dense_init(ks[4], (cfg.enc_seq, D), dt,
+                                           scale=0.02)
+            params["enc_norm"] = jnp.zeros((D,), dt)
+            params["blocks"] = T.stacked_params(
+                ks[3], cfg.n_layers, T.encdec_block_params, cfg, dt)
+            params["dec_pos"] = dense_init(ks[5], (8192, D), dt, scale=0.02)
+        else:
+            raise ValueError(fam)
+        return params
+
+    # ------------------------------------------------------------------ #
+    def _embed(self, params, tokens, positions):
+        cfg = self.cfg
+        ct = _dtype(cfg.compute_dtype)
+        x = params["embed"].astype(ct)[tokens]
+        if cfg.family == "encdec" and cfg.rope_theta <= 0:
+            # absolute positional embeddings (whisper-style decoder)
+            pe = params["dec_pos"].astype(ct)
+            x = x + pe[jnp.clip(positions, 0, pe.shape[0] - 1)]
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(x.dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        Vp = logits.shape[-1]
+        if Vp != cfg.vocab:   # mask the padded vocab tail
+            logits = jnp.where(jnp.arange(Vp) < cfg.vocab, logits, -1e30)
+        return logits
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        ct = _dtype(cfg.compute_dtype)
+        x = frames.astype(ct) + params["enc_pos"].astype(ct)[None]
+        x = T.encoder_stack(params["encoder"], x, cfg)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _backbone(self, params, x, *, positions, mode, caches=None,
+                  cache_pos=None, enc_out=None, xa_caches=None):
+        cfg = self.cfg
+        fam = cfg.family
+        aux = jnp.float32(0.0)
+        if fam in ("dense", "vlm"):
+            x, new_caches = T.dense_stack(params["blocks"], x, cfg,
+                                          positions=positions, mode=mode,
+                                          caches=caches, cache_pos=cache_pos)
+        elif fam == "moe":
+            x, new_caches, aux = T.moe_stack(params["blocks"], x, cfg,
+                                             positions=positions, mode=mode,
+                                             caches=caches,
+                                             cache_pos=cache_pos)
+        elif fam == "ssm":
+            x, new_caches = T.ssm_stack(params["blocks"], x, cfg,
+                                        caches=caches)
+        elif fam == "hybrid":
+            x, new_caches = T.hybrid_stack(params["blocks"], x, cfg,
+                                           positions=positions, mode=mode,
+                                           caches=caches,
+                                           cache_pos=cache_pos)
+        elif fam == "encdec":
+            x, new_caches, xa_kvs = T.decoder_stack(
+                params["blocks"], x, cfg, positions=positions, mode=mode,
+                enc_out=enc_out, xa_caches=xa_caches, caches=caches,
+                cache_pos=cache_pos)
+            return x, (new_caches, xa_kvs), aux
+        else:
+            raise ValueError(fam)
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------------ #
+    # training                                                            #
+    # ------------------------------------------------------------------ #
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        B, S = inp.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        enc_out = None
+        x = self._embed(params, inp, positions)
+        n_prefix = 0
+        if cfg.family == "vlm":
+            ct = x.dtype
+            x = jnp.concatenate([batch["vis"].astype(ct), x], axis=1)
+            n_prefix = batch["vis"].shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(n_prefix + S), (B, n_prefix + S))
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+        x, _, aux = self._backbone(params, x, positions=positions,
+                                   mode="causal", enc_out=enc_out)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        logits = self._logits(params, x).astype(jnp.float32)
+        # NLL via one-hot contraction: take_along_axis would gather over the
+        # model-sharded vocab dim and force full logits replication under
+        # GSPMD (EXPERIMENTS.md §Perf #0); the one-hot einsum partitions.
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = (labels[..., None] ==
+                  jnp.arange(logits.shape[-1])[None, None, :])
+        picked = jnp.sum(logits * onehot, axis=-1)
+        loss = jnp.mean(lse - picked)
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux
+        return loss
+
+    # ------------------------------------------------------------------ #
+    # serving                                                             #
+    # ------------------------------------------------------------------ #
+    def init_caches(self, batch: int, max_len: int):
+        cfg = self.cfg
+        ct = _dtype(cfg.compute_dtype)
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            return T.init_attn_caches(cfg, cfg.n_layers, batch, max_len, ct)
+        if fam == "ssm":
+            return T.init_ssm_caches(cfg, cfg.n_layers, batch, ct)
+        if fam == "hybrid":
+            n_inv = cfg.n_layers // cfg.shared_attn_every
+            return {
+                "ssm": T.init_ssm_caches(cfg, cfg.n_layers, batch, ct),
+                "attn": T.init_attn_caches(cfg, n_inv, batch, max_len, ct),
+            }
+        if fam == "encdec":
+            return {
+                "self": T.init_attn_caches(cfg, cfg.n_layers, batch,
+                                           max_len, ct),
+                # cross buffers sized to the encoder output; prefill
+                # overwrites them with the actual projected encoder KV
+                "cross": T.init_attn_caches(cfg, cfg.n_layers, batch,
+                                            cfg.enc_seq, ct),
+            }
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_len: int):
+        """Forward over the prompt; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self._embed(params, tokens, positions)
+        caches = self.init_caches(B, max_len)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["vis"].astype(x.dtype), x], axis=1)
+            Sv = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(Sv), (B, Sv))
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+            x, (new_self, xa_kvs), _ = self._backbone(
+                params, x, positions=positions, mode="causal",
+                caches=caches["self"], enc_out=enc_out)
+            logits = self._logits(params, x[:, -1:])
+            return logits, {"self": new_self, "cross": xa_kvs}
+        x, new_caches, _ = self._backbone(params, x, positions=positions,
+                                          mode="causal", caches=caches)
+        logits = self._logits(params, x[:, -1:])
+        return logits, new_caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """One decode step.  tokens: int32[B]; pos: int32 scalar (the
+        position being written, == current cache length)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x = self._embed(params, tokens[:, None], positions)
+        if cfg.family == "encdec":
+            x, (new_self, xa), _ = self._backbone(
+                params, x, positions=positions, mode="decode",
+                caches=caches["self"], xa_caches=caches["cross"],
+                cache_pos=pos)
+            logits = self._logits(params, x)
+            return logits, {"self": new_self, "cross": xa}
+        x, new_caches, _ = self._backbone(params, x, positions=positions,
+                                          mode="decode", caches=caches,
+                                          cache_pos=pos)
+        return self._logits(params, x), new_caches
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort-based dispatch.
+
+Dense one-hot dispatch would multiply compiled FLOPs by E/top_k (64× for
+arctic) and wreck the roofline; instead tokens are sorted by expert
+assignment and each expert runs one dense [capacity, D] @ [D, F] GEMM —
+compiled FLOPs stay ≈ active-FLOPs × capacity_factor, which is what the
+6·N_active·D model-FLOPs accounting in the roofline expects.
+
+Supports the two assigned MoE variants:
+  * qwen2-moe: 60 routed top-4 + 4 fused *shared* experts (always-on);
+  * arctic: 128 routed top-2 + a parallel *dense residual* FFN.
+
+Expert-parallel sharding is applied from outside via PartitionSpecs on the
+[E, D, F] weights (strategy "ep": E over the model axis; "tp": F over the
+model axis — chosen per arch for divisibility, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    cap = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)   # round up to a lane-friendly multiple
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg):
+    """x: [B, S, D] → (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(T, D)
+
+    # --- routing -------------------------------------------------------- #
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # [T, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                            # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E), axis=0)   # top-1 load
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------- #
+    cap = _capacity(T, cfg)
+    flat_e = top_e.reshape(-1)                              # [T*K]
+    flat_w = top_p.reshape(-1).astype(x.dtype)
+    order = jnp.argsort(flat_e)                             # stable
+    ranked_e = flat_e[order]
+    tok_of = order // K                                     # source token
+    # position within the expert segment
+    seg_start = jnp.searchsorted(ranked_e, jnp.arange(E), side="left")
+    seg_pos = jnp.arange(T * K) - seg_start[ranked_e]
+    keep = seg_pos < cap
+    dest = jnp.where(keep, ranked_e * cap + seg_pos, E * cap)  # E*cap = drop
+
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    buf = buf.at[dest].set(xf[tok_of])
+    eb = buf[:-1].reshape(E, cap, D)
+
+    # --- expert GEMMs ---------------------------------------------------- #
+    if "w_gate_up" in p["experts"]:
+        gu = jnp.einsum("ecd,edf->ecf", eb,
+                        p["experts"]["w_gate_up"].astype(x.dtype))
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb,
+                                    p["experts"]["w_gate"].astype(x.dtype)))
+             * jnp.einsum("ecd,edf->ecf", eb,
+                          p["experts"]["w_up"].astype(x.dtype)))
+    ey = jnp.einsum("ecf,efd->ecd", h,
+                    p["experts"]["w_down"].astype(x.dtype))
+
+    # --- combine ---------------------------------------------------------- #
+    flat_y = ey.reshape(E * cap, D)
+    gathered = jnp.where(keep[:, None],
+                         flat_y[jnp.clip(dest, 0, E * cap - 1)], 0.0)
+    gathered = gathered * flat_w[order][:, None]
+    y = jnp.zeros((T, D), x.dtype).at[tok_of].add(gathered)
+    y = y.reshape(B, S, D)
+
+    # --- always-on paths --------------------------------------------------#
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg.act)
+    if "dense_res" in p:
+        y = y + mlp(p["dense_res"], x, cfg.act)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_params(key, cfg, dtype):
+    from .layers import dense_init, mlp_params
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    if getattr(cfg, "fused_gate_up", False):
+        experts = {
+            "w_gate_up": dense_init(ks[1], (E, D, 2 * F), dtype,
+                                    scale=D ** -0.5),
+            "w_down": dense_init(ks[3], (E, F, D), dtype, scale=F ** -0.5),
+        }
+    else:
+        experts = {
+            "w_gate": dense_init(ks[1], (E, D, F), dtype, scale=D ** -0.5),
+            "w_up": dense_init(ks[2], (E, D, F), dtype, scale=D ** -0.5),
+            "w_down": dense_init(ks[3], (E, F, D), dtype, scale=F ** -0.5),
+        }
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype),
+        "experts": experts,
+    }
+    fused = getattr(cfg, "fused_gate_up", False)
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(ks[4], D, cfg.d_ff_shared, dtype, cfg.act,
+                                 fused=fused)
+    if cfg.moe_dense_residual:
+        p["dense_res"] = mlp_params(ks[5], D, cfg.d_ff_dense, dtype,
+                                    cfg.act, fused=fused)
+    return p

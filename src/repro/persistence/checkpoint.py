@@ -1,0 +1,189 @@
+"""NVTraverse-style checkpoint manager (+ Izraelevitz-style baseline).
+
+Commit protocol for ``save(step, tree, aux)`` — Protocols 1+2 at framework
+scale:
+
+  1. *node initialization*: write each changed leaf to the step dir and
+     flush it (flush-after-local-write; no fence yet);
+  2. *makePersistent / delta*: only leaves whose digest differs from the
+     parent manifest are written at all — unchanged leaves reference the
+     parent's file (the journey is not persisted);
+  3. *ensureReachable*: the manifest (carrying the ``prev`` pointer that
+     links this step into the recoverable chain) is written + flushed;
+  4. **one fence**, then the atomic manifest rename (the publish CAS).
+
+``policy="izraelevitz"`` instead fences after every single write — the
+general-transform baseline the paper compares against; the benchmark
+(benchmarks/checkpoint_bench.py) reports the fsync economy.
+
+Recovery (:meth:`recover`) is ``disconnect(root)``: every step directory
+that is not the target of a committed-manifest chain walk is a
+marked-but-disconnected node and is trimmed; auxiliary volatile state
+(compiled fns, data iterators) is rebuilt by the caller from ``aux``.
+
+Mesh-agnostic: leaves are stored as logical full arrays (np.save bytes);
+``restore(shardings=...)`` device_puts onto any new mesh — elastic
+restarts re-shard freely.
+"""
+from __future__ import annotations
+
+import io
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from .manifest import (Manifest, StagedIO, digest, list_step_dirs,
+                       manifest_rel)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def _leaf_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _leaf_from_bytes(b: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(b), allow_pickle=False)
+
+
+class CheckpointManager:
+    def __init__(self, root, *, policy: str = "nvtraverse", seed: int = 0):
+        assert policy in ("nvtraverse", "izraelevitz")
+        self.io = StagedIO(Path(root), seed=seed)
+        self.policy = policy
+        self._last_manifest: Optional[Manifest] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, aux: Optional[dict] = None,
+             *, crash_after: Optional[str] = None) -> Manifest:
+        """Commit a checkpoint.  ``crash_after`` ∈ {"shards", "manifest",
+        None} injects a crash for the durability tests (before the fence /
+        before the publish rename respectively)."""
+        flat = _flatten(tree)
+        parent = self._last_manifest
+        files = {}
+        sdir = f"step_{step:08d}"
+        for name, arr in flat.items():
+            data = _leaf_bytes(arr)
+            d = digest(data)
+            if (parent is not None and name in parent.files
+                    and parent.files[name]["digest"] == d):
+                # unchanged since parent: reference, don't rewrite
+                ref = dict(parent.files[name])
+                ref["owner"] = ref.get("owner", parent.step)
+                files[name] = ref
+                continue
+            rel = f"{sdir}/{name.replace('/', '_')}.npy"
+            self.io.write(rel, data)
+            self.io.flush(rel)
+            if self.policy == "izraelevitz":
+                self.io.fence()          # fence per write: the baseline
+            files[name] = {"file": rel, "digest": d, "owner": step}
+        if crash_after == "shards":
+            return None
+        man = Manifest(step=step, prev=(parent.step if parent else None),
+                       files=files, aux=aux or {})
+        tmp_rel = f"{sdir}/MANIFEST.tmp"
+        self.io.write(tmp_rel, man.to_bytes())
+        self.io.flush(tmp_rel)           # ensureReachable: the prev-link
+        self.io.fence()                  # THE single fence
+        if crash_after == "manifest":
+            return None
+        self.io.publish(tmp_rel, manifest_rel(step))   # the CAS
+        self._last_manifest = man
+        return man
+
+    # ------------------------------------------------------------------ #
+    def recover(self) -> Optional[Manifest]:
+        """disconnect(root): trim every uncommitted step dir, return the
+        newest committed manifest (head of the recoverable chain)."""
+        committed = {}
+        for step in list_step_dirs(self.io.root):
+            rel = manifest_rel(step)
+            if self.io.exists(rel):
+                try:
+                    committed[step] = Manifest.from_bytes(self.io.read(rel))
+                except Exception:
+                    continue            # torn manifest: treat as marked
+        # a manifest is valid iff every referenced file verifies — the file
+        # digests carry the full dependency closure (durable linearizability:
+        # an op's effects require its dependencies), and remain checkable
+        # even after older manifests are garbage-collected.
+        valid: Dict[int, Manifest] = {}
+        for step in sorted(committed):
+            man = committed[step]
+            ok = all(self.io.exists(info["file"])
+                     and digest(self.io.read(info["file"])) == info["digest"]
+                     for info in man.files.values())
+            if ok:
+                valid[step] = man
+        head = valid[max(valid)] if valid else None
+        # trim marked nodes: uncommitted or invalid step dirs not
+        # referenced by the surviving chain
+        keep_files = set()
+        for man in valid.values():
+            keep_files.update(info["file"] for info in man.files.values())
+        for step in list_step_dirs(self.io.root):
+            if step not in valid:
+                sdir = f"step_{step:08d}"
+                if not any(f.startswith(sdir) for f in keep_files):
+                    self.io.remove_tree(sdir)
+        self._last_manifest = head
+        return head
+
+    # ------------------------------------------------------------------ #
+    def restore(self, tree_like, *, shardings=None):
+        """Restore the newest committed checkpoint into ``tree_like``'s
+        structure; optional shardings tree re-shards onto any mesh."""
+        man = self.recover()
+        if man is None:
+            return None, None
+        flat_like = _flatten(tree_like)
+        restored = {}
+        for name in flat_like:
+            info = man.files[name]
+            restored[name] = _leaf_from_bytes(self.io.read(info["file"]))
+        # rebuild the pytree in original structure
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+            tree_like)
+        names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                          for p in path) for path, _ in leaves_paths]
+        leaves = [restored[n] for n in names]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            leaves = [jax.device_put(l, s)
+                      for l, s in zip(leaves, sh_leaves)]
+        else:
+            leaves = [jax.numpy.asarray(l) for l in leaves]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return man, tree
+
+    def gc(self, keep: int = 2) -> None:
+        """Drop all but the newest ``keep`` committed checkpoints (never
+        breaking delta-references of the survivors)."""
+        man = self.recover()
+        if man is None:
+            return
+        steps = sorted(s for s in list_step_dirs(self.io.root)
+                       if self.io.exists(manifest_rel(s)))
+        survivors = steps[-keep:]
+        keep_files = set()
+        for s in survivors:
+            m = Manifest.from_bytes(self.io.read(manifest_rel(s)))
+            keep_files.update(i["file"] for i in m.files.values())
+        for s in steps[:-keep]:
+            sdir = f"step_{s:08d}"
+            if not any(f.startswith(sdir) for f in keep_files):
+                self.io.remove_tree(sdir)

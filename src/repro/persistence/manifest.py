@@ -1,0 +1,137 @@
+"""Durable checkpoint-manifest chain + two-level file IO.
+
+This is the paper's structure at framework scale (DESIGN.md §2):
+
+  * the manifest chain is a linked list rooted at the newest committed
+    manifest; each manifest's ``prev`` field is the Supplement-2
+    *original parent* pointer;
+  * :class:`StagedIO` is the two-level memory: writes land in a volatile
+    staging area (page cache), ``flush`` marks a file, ``fence`` moves all
+    marked files to durable storage — exactly core/pmem.py semantics at
+    file granularity, with the same crash adversary (any subset of
+    unfenced staged files may have been "evicted" to disk);
+  * a checkpoint is *published* by the manifest rename — the single
+    atomic pointer swing (the CAS of the critical phase).  A step
+    directory without a committed manifest is a marked-but-disconnected
+    node: recovery trims it (Supplement 1's ``disconnect``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IOCounters:
+    writes: int = 0
+    bytes_staged: int = 0
+    flushes: int = 0
+    fences: int = 0
+    bytes_fenced: int = 0
+
+    def snapshot(self):
+        return dataclasses.asdict(self)
+
+
+class StagedIO:
+    """Two-level file IO with explicit flush/fence and crash injection."""
+
+    def __init__(self, root: Path, seed: int = 0):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._staged: Dict[str, bytes] = {}
+        self._flushed: set = set()
+        self.counters = IOCounters()
+        self._rng = np.random.default_rng(seed)
+
+    # -- volatile writes -------------------------------------------------- #
+    def write(self, rel: str, data: bytes) -> None:
+        self._staged[rel] = data
+        self.counters.writes += 1
+        self.counters.bytes_staged += len(data)
+
+    def flush(self, rel: str) -> None:
+        if rel in self._staged:
+            self._flushed.add(rel)
+            self.counters.flushes += 1
+
+    def fence(self) -> None:
+        self.counters.fences += 1
+        for rel in sorted(self._flushed):
+            data = self._staged.pop(rel, None)
+            if data is None:
+                continue
+            path = self.root / rel
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_bytes(data)
+            self.counters.bytes_fenced += len(data)
+        self._flushed.clear()
+
+    # -- the publish CAS --------------------------------------------------- #
+    def publish(self, tmp_rel: str, final_rel: str) -> None:
+        """Atomic rename of a durable file — the pointer swing.  The tmp
+        file must already be fenced."""
+        os.replace(self.root / tmp_rel, self.root / final_rel)
+
+    # -- crash adversary --------------------------------------------------- #
+    def crash(self, evict: str = "none", p_evict: float = 0.5) -> None:
+        """Lose the staging area; a chosen subset of staged-but-unfenced
+        files may still have reached disk (background eviction)."""
+        if evict != "none":
+            for rel, data in list(self._staged.items()):
+                if evict == "all" or self._rng.random() < p_evict:
+                    path = self.root / rel
+                    path.parent.mkdir(parents=True, exist_ok=True)
+                    path.write_bytes(data)
+        self._staged.clear()
+        self._flushed.clear()
+
+    # -- durable reads ----------------------------------------------------- #
+    def read(self, rel: str) -> bytes:
+        return (self.root / rel).read_bytes()
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).exists()
+
+    def remove_tree(self, rel: str) -> None:
+        shutil.rmtree(self.root / rel, ignore_errors=True)
+
+
+def digest(data: bytes) -> str:
+    return hashlib.sha1(data).hexdigest()
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    prev: Optional[int]
+    files: Dict[str, dict]          # leaf path -> {"file","digest","owner"}
+    aux: dict                       # data cursor, rng, mesh note, ...
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "Manifest":
+        d = json.loads(b.decode())
+        return Manifest(step=d["step"], prev=d["prev"], files=d["files"],
+                        aux=d.get("aux", {}))
+
+
+def manifest_rel(step: int) -> str:
+    return f"step_{step:08d}/MANIFEST.json"
+
+
+def list_step_dirs(root: Path) -> Iterable[int]:
+    for p in sorted(Path(root).glob("step_*")):
+        try:
+            yield int(p.name.split("_")[1])
+        except (IndexError, ValueError):
+            continue

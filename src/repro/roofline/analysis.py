@@ -1,0 +1,128 @@
+"""Three-term roofline from the dry-run artifacts (deliverable g).
+
+Per (arch × shape) cell, from the single-pod compiled program:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+
+(the dry-run records per-DEVICE numbers — the partitioned module — so the
+spec's global/(chips × bw) formula reduces to per-device/bw).  Also:
+
+    MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens of the
+    step; the MODEL/HLO ratio exposes remat & padding waste; the roofline
+    fraction = useful-compute time / dominant term is the §Perf score.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+from ..configs.base import SHAPES
+from ..configs.registry import ARCHS
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CHIPS = 256
+
+
+def tokens_of(shape) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch          # decode: one token per sequence
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with MoE active params; decode counts the KV/state read as
+    compute via the same 6·N·D convention (2·N per token fwd, no bwd)."""
+    n = cfg.n_active_params()
+    toks = tokens_of(shape)
+    if shape.kind == "train":
+        return 6.0 * n * toks
+    return 2.0 * n * toks              # forward-only
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok" or "cost" not in rec:
+        return None
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["cost"]["collective_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / CHIPS
+    useful_t = mf_dev / PEAK_FLOPS_BF16
+    frac = useful_t / max(terms.values()) if max(terms.values()) else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_dev": mf_dev, "hlo_flops_dev": flops_dev,
+        "model_over_hlo": mf_dev / flops_dev if flops_dev else 0.0,
+        "roofline_fraction": frac,
+        "temp_gb": rec.get("temp_size_in_bytes", 0) / 1e9,
+        "args_gb": rec.get("argument_size_in_bytes", 0) / 1e9,
+        "collective_detail": rec["cost"].get("collective_detail", {}),
+    }
+
+
+def load_table(dryrun_dir="benchmarks/results/dryrun", mesh="single"):
+    rows, skips = [], []
+    for p in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    return rows, skips
+
+
+def render_markdown(rows, skips) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac | HBM GB (args+temp) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['model_over_hlo']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['args_gb'] + r['temp_gb']:.1f} |")
+    if skips:
+        out.append("")
+        out.append(f"Skipped cells ({len(skips)}): " + ", ".join(
+            f"{s['arch']}:{s['shape']}" for s in skips) +
+            " — pure full-attention archs at 500k (DESIGN.md §4).")
+    return "\n".join(out)
+
+
+def main():
+    for tag, d in (("", "benchmarks/results/dryrun"),
+                   ("_opt", "benchmarks/results/dryrun_opt")):
+        if not Path(d).exists():
+            continue
+        rows, skips = load_table(d)
+        if not rows:
+            continue
+        print(f"==== roofline{tag or ' (baseline)'} ====")
+        print(render_markdown(rows, skips))
+        Path(f"benchmarks/results/roofline{tag}.md").write_text(
+            render_markdown(rows, skips) + "\n")
+        Path(f"benchmarks/results/roofline{tag}.json").write_text(
+            json.dumps({"rows": rows, "skips": [
+                {"arch": s["arch"], "shape": s["shape"]} for s in skips]},
+                indent=1))
+
+
+if __name__ == "__main__":
+    main()

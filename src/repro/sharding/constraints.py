@@ -1,0 +1,90 @@
+"""Activation sharding constraints (with_sharding_constraint hooks).
+
+The model code calls :func:`constrain` at layout-critical points (post-QKV,
+attention scores, block boundaries).  When no mesh is registered (unit
+tests, single-device runs) the hooks are no-ops, so the model stays
+mesh-agnostic; launch/dryrun + launch/train register the active mesh.
+
+Divisibility-guarded like sharding/specs.py: an axis that does not divide
+its dim is dropped from the constraint rather than relying on GSPMD
+padding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+class use_mesh:
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = _ACTIVE_MESH
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+
+
+def _guard(dim: int, axes):
+    if axes is None:
+        return None
+    mesh = _ACTIVE_MESH
+    size = 1
+    axes_t = axes if isinstance(axes, tuple) else (axes,)
+    for a in axes_t:
+        if a not in mesh.axis_names:
+            return None
+        size *= mesh.shape[a]
+    return axes if dim % size == 0 and dim >= size else None
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """constrain(x, batch_axes, None, 'model', None) — guarded per-dim."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = P(*[_guard(d, a) for d, a in zip(x.shape, axes)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return None
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain_like_params(tree, cfg):
+    """Pin a params-shaped tree (e.g. the gradient accumulator) to the
+    parameter sharding rules — without this the scan-carry accumulator's
+    sharding is compiler-chosen and was observed to replicate over the
+    model axis, inflating the gradient all-reduce 16× (§Perf)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return tree
+    from .specs import param_spec
+
+    def one(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        spec = param_spec(names if names else ("?",), leaf.shape, cfg, mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,212 @@
+"""PartitionSpec rules: DP / FSDP(ZeRO) / TP / EP / SP on the production mesh.
+
+Baseline strategy (the §Perf pass iterates on it):
+
+  * **DP**: the batch dim of activations over ``("pod","data")`` (multi-pod)
+    or ``("data",)``; gradient reduction is implicit in GSPMD.
+  * **TP** over ``"model"``: attention heads (Q and KV projections), FFN
+    hidden, vocab (embedding + logits).
+  * **FSDP/ZeRO** over ``"data"``: the *other* matrix dim of every large
+    parameter is sharded over the data axis, so parameters and optimizer
+    slots are stored fully sharded; XLA all-gathers them per layer inside
+    the scanned block (overlappable) and reduce-scatters gradients.
+  * **EP** over ``"model"`` (arctic: 128 % 16 == 0): expert dim sharded,
+    token all-to-all induced by GSPMD; qwen2-moe (60 experts) uses the TP
+    strategy (expert d_ff over ``"model"``) instead — divisibility rules in
+    DESIGN.md §5.
+  * **SP**: decode KV caches shard the KV-head dim over ``"model"`` when it
+    divides, otherwise the *sequence* dim (flash-decode style); long_500k
+    (batch=1) shards sequence over ``"data"`` too.
+
+Every rule is divisibility-guarded: a dim that an axis does not divide is
+left unsharded rather than relying on GSPMD padding (keeps memory_analysis
+honest).  What got replicated is queryable via ``explain()`` for the
+roofline notes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.mamba2 import SSMCache  # noqa: F401 (pytree registration)
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _ok(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def _spec(mesh: Mesh, shape, *axes) -> P:
+    """Divisibility-guarded PartitionSpec.
+
+    Rules are written for the parameter's natural rank; scanned stacks add
+    a leading [n_layers] dim, so axes are aligned to the TRAILING dims and
+    leading extra dims stay unsharded (the 62-layer stacked-params bug from
+    the baseline dry-run — EXPERIMENTS.md §Perf #0)."""
+    lead = max(0, len(shape) - len(axes))
+    out = [None] * lead
+    for dim, ax in zip(shape[lead:], axes[-(len(shape) - lead):] if
+                       len(shape) > lead else ()):
+        out.append(ax if ax is not None and _ok(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------- #
+# parameters                                                             #
+# --------------------------------------------------------------------- #
+def param_spec(path: Tuple[str, ...], shape, cfg, mesh: Mesh,
+               *, infer: bool = False) -> P:
+    """Sharding rule for one parameter, keyed on its tree path.
+
+    ``infer=True`` (prefill/decode cells): drop the ZeRO/FSDP storage axis
+    — inference has no optimizer state, so params are stored model-sharded
+    and replicated over the data axes, eliminating the per-layer parameter
+    all-gathers entirely (§Perf B4)."""
+    name = path[-1]
+    fsdp = None if infer else "data"   # ZeRO storage axis
+    tp = "model"
+
+    if name in ("embed",):
+        # feature-dim sharding only: a vocab-sharded table turns the token
+        # gather into an involuntary full rematerialization under GSPMD
+        # (observed in the baseline dry-run; EXPERIMENTS.md §Perf #0)
+        return _spec(mesh, shape, None, tp)          # [V, D]
+    if name == "lm_head":
+        return _spec(mesh, shape, fsdp, tp)          # [D, V]
+    if name in ("enc_pos", "dec_pos"):
+        return _spec(mesh, shape, None, fsdp)
+    if name in ("wq", "wk", "wv", "wqkv"):
+        return _spec(mesh, shape, fsdp, tp)          # [D, (H+2K)*dh]
+    if name == "wo":
+        return _spec(mesh, shape, tp, fsdp)          # [H*dh, D]
+    if name in ("bq", "bk", "bv", "bqkv"):
+        return _spec(mesh, shape, tp)
+    if name in ("w_gate", "w_up", "w_down", "w_gate_up") \
+            and "experts" in path:
+        if cfg.moe_strategy == "ep":
+            # EP: experts over model, ZeRO d_model/d_ff over data
+            if name == "w_down":                     # [E, F, D]
+                return _spec(mesh, shape, tp, fsdp, None)
+            return _spec(mesh, shape, tp, fsdp, None)  # [E, D, F]
+        # TP: expert hidden over model, ZeRO d_model over data
+        if name == "w_down":                         # [E, F, D]
+            return _spec(mesh, shape, None, tp, fsdp)
+        return _spec(mesh, shape, None, fsdp, tp)    # [E, D, F]
+    if name in ("w_gate", "w_up", "w_gate_up"):
+        return _spec(mesh, shape, fsdp, tp)          # [D, F] / [D, 2F]
+    if name == "w_down":
+        return _spec(mesh, shape, tp, fsdp)          # [F, D]
+    if name == "router":
+        return _spec(mesh, shape, fsdp, None)        # [D, E]
+    ssm_tp = tp if getattr(cfg, "ssm_proj_tp", True) else None
+    if name == "in_proj":
+        return _spec(mesh, shape, fsdp, ssm_tp)      # [D, di+cdim+H]
+    if name == "out_proj":
+        return _spec(mesh, shape, ssm_tp, fsdp)      # [di, D]
+    if name == "out_norm":
+        return _spec(mesh, shape, ssm_tp)            # [di]
+    if name == "conv_w":
+        return _spec(mesh, shape, None, ssm_tp)      # [ck, cdim]
+    if name == "conv_b":
+        return _spec(mesh, shape, ssm_tp)
+    # norms, scalars, per-head vectors: replicate
+    return P()
+
+
+def params_shardings(params_shape, cfg, mesh: Mesh, *, infer: bool = False):
+    """Tree of NamedSharding matching a params(-shaped) tree.
+
+    ``params_shape``: pytree of ShapeDtypeStruct or arrays.  Works for
+    optimizer state too (same leaf paths modulo slot nesting — the rule only
+    inspects the last path components that name the parameter)."""
+    def one(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        # optimizer slots nest under mu/nu/vr/vc/v — strip them
+        names = tuple(n for n in names if n not in
+                      ("mu", "nu", "vr", "vc", "v"))
+        shape = leaf.shape
+        spec = param_spec(names if names else ("?",), shape, cfg, mesh,
+                          infer=infer)
+        # factored Adafactor slots drop the last dim; re-guard rank
+        if len(spec) > len(shape):
+            spec = P(*spec[:len(shape)])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# --------------------------------------------------------------------- #
+# activations / inputs / caches                                          #
+# --------------------------------------------------------------------- #
+def batch_spec(mesh: Mesh, global_batch: int, rank: int = 2) -> P:
+    ba = batch_axes(mesh)
+    if not _ok(global_batch, mesh, ba):
+        ba = ("data",) if _ok(global_batch, mesh, ("data",)) else None
+    return P(ba, *([None] * (rank - 1)))
+
+
+def attn_cache_spec(cfg, mesh: Mesh, batch: int) -> P:
+    """[L, B, S, K, dh] KV cache: heads over model when divisible, else
+    sequence over model; batch over data axes; batch=1 also shards the
+    sequence over data (long-context SP)."""
+    ba = batch_axes(mesh)
+    K = cfg.n_kv_heads
+    heads_ok = K % mesh.shape["model"] == 0
+    if batch == 1:
+        seq_ax = "data" if heads_ok else ("data", "model")
+        return P(None, None, seq_ax, "model" if heads_ok else None, None)
+    bax = ba if batch % _axsize(mesh, ba) == 0 else (
+        ("data",) if batch % mesh.shape["data"] == 0 else None)
+    if heads_ok:
+        return P(None, bax, None, "model", None)
+    return P(None, bax, "model", None, None)
+
+
+def _axsize(mesh, axes):
+    s = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        s *= mesh.shape[a]
+    return s
+
+
+def ssm_cache_spec(cfg, mesh: Mesh, batch: int):
+    """SSMCache(state=[L,B,H,P,N], conv=[L,B,ck-1,cdim]) sharding."""
+    ba = batch_axes(mesh)
+    bax = ba if batch % _axsize(mesh, ba) == 0 else None
+    h_ax = "model" if cfg.ssm_heads % mesh.shape["model"] == 0 else None
+    cd_ax = "model" if (cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) \
+        % mesh.shape["model"] == 0 else None
+    return SSMCache(state=P(None, bax, h_ax, None, None),
+                    conv=P(None, bax, None, cd_ax))
+
+
+def caches_shardings(cfg, mesh: Mesh, batch: int):
+    """Sharding tree matching Model.init_caches output."""
+    fam = cfg.family
+    kv = lambda: {"k": NamedSharding(mesh, attn_cache_spec(cfg, mesh, batch)),
+                  "v": NamedSharding(mesh, attn_cache_spec(cfg, mesh, batch))}
+    if fam in ("dense", "vlm", "moe"):
+        return kv()
+    if fam == "ssm":
+        sp = ssm_cache_spec(cfg, mesh, batch)
+        return SSMCache(state=NamedSharding(mesh, sp.state),
+                        conv=NamedSharding(mesh, sp.conv))
+    if fam == "hybrid":
+        sp = ssm_cache_spec(cfg, mesh, batch)
+        return {"ssm": SSMCache(state=NamedSharding(mesh, sp.state),
+                                conv=NamedSharding(mesh, sp.conv)),
+                "attn": kv()}
+    if fam == "encdec":
+        return {"self": kv(), "cross": kv()}
+    raise ValueError(fam)

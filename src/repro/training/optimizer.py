@@ -1,0 +1,154 @@
+"""Optimizers built in pure JAX (no external deps): AdamW and Adafactor.
+
+Moment dtype is configurable (``cfg.opt_dtype``): the 480B-class MoE runs
+bf16 moments so weights+optimizer fit the v5e HBM budget (EXPERIMENTS.md
+§Dry-run fits-notes); everything else defaults to fp32.
+
+State layout mirrors the param pytree so the sharding specs of a parameter
+apply verbatim to its optimizer slots (ZeRO-style storage sharding comes
+from the PartitionSpecs in sharding/specs.py, not from this module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    moment_dtype: str = "float32"
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw(cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        lr = _schedule(cfg, step)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+            nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            mhat = mu32 / c1
+            vhat = nu32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        newp = jax.tree.map(lambda t3: t3[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t3: t3[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t3: t3[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+
+
+def adafactor(cfg: AdafactorConfig = AdafactorConfig()) -> Optimizer:
+    """Factored second moments: O(r+c) state per matrix instead of O(r·c)
+    — the memory-saving alternative for the giant models (§Perf knob)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def slot(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(slot, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        rho = 1.0 - t ** (-cfg.decay)
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+        lr = cfg.lr * warm
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + cfg.eps
+            if _factored(p):
+                vr = rho * s["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * s["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                # u = g / sqrt( (vr/mean(vr)) ⊗ vc )
+                denom_r = vr / (jnp.mean(vr, axis=-1, keepdims=True) + 1e-30)
+                u = g / (jnp.sqrt(denom_r + 1e-30)[..., None]
+                         * jnp.sqrt(vc + 1e-30)[..., None, :])
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = rho * s["v"] + (1 - rho) * g2
+                u = g / jnp.sqrt(v + 1e-30)
+                news = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * u
+                    - lr * cfg.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), news
+
+        out = jax.tree.map(upd, params, grads, state)
+        newp = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        news = jax.tree.map(lambda o: o[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, news
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(arch_cfg, kind: str = "adamw") -> Optimizer:
+    if kind == "adafactor":
+        return adafactor()
+    return adamw(AdamWConfig(moment_dtype=arch_cfg.opt_dtype))

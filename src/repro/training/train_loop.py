@@ -1,0 +1,95 @@
+"""Train-step factory: microbatched grad accumulation (scan), optimizer
+update, and the sharded jit wiring used by both the dry-run and the real
+training driver (launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer
+
+
+def shape_batch_for_accum(batch: dict, microbatches: int) -> dict:
+    """[B, ...] -> [M, B/M, ...] on every batch leaf."""
+    def r(a):
+        B = a.shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        return a.reshape((microbatches, B // microbatches) + a.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model, cfg, optimizer: Optimizer):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params', opt_state', metrics).
+
+    When ``cfg.microbatches > 1`` the batch must arrive PRE-SHAPED as
+    [M, B/M, ...] (use :func:`shape_batch_for_accum` host-side) — reshaping
+    inside the jitted step loses the batch-dim sharding under GSPMD.
+    Gradient accumulation is a ``lax.scan`` over microbatches; the
+    accumulator dtype follows ``cfg.opt_dtype`` (bf16 for the 480B MoE so
+    the extra gradient buffer stays inside the HBM budget)."""
+    M = max(1, cfg.microbatches)
+    acc_dt = jnp.dtype(cfg.opt_dtype)
+
+    def loss_fn(p, mb):
+        return model.loss(p, mb)
+
+    def train_step(params, opt_state, batch, step):
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = batch   # pre-shaped [M, B/M, ...]
+            from ..sharding.constraints import constrain_like_params
+            pin = (lambda t: constrain_like_params(t, cfg)) \
+                if getattr(cfg, "accum_constraint", False) else (lambda t: t)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = pin(jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), gsum, g))
+                return (gsum, lsum + l), None
+
+            zeros = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: (g / M).astype(jnp.float32), gsum)
+            loss = lsum / M
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               step)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+# --------------------------------------------------------------------- #
+# manual-DP variant with gradient compression (multi-pod feature)        #
+# --------------------------------------------------------------------- #
+def make_compressed_psum_grads(axis_name: str = "pod"):
+    """bf16-compressed cross-pod gradient all-reduce with fp32 error
+    feedback — used by the shard_map DP wrapper in launch/train.py when
+    ``--grad-compression`` is on.
+
+    Returns f(grads_fp32, error_fp32) -> (reduced_fp32, new_error)."""
+
+    def f(grads, err):
+        def one(g, e):
+            g = g.astype(jnp.float32) + e
+            g16 = g.astype(jnp.bfloat16)
+            new_e = g - g16.astype(jnp.float32)      # residual kept locally
+            red = jax.lax.pmean(g16, axis_name).astype(jnp.float32)
+            return red, new_e
+
+        out = jax.tree.map(one, grads, err)
+        red = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return red, new_err
+
+    return f

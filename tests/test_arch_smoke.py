@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one prefill/decode step on CPU; asserts shapes + no
+NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_arch, tiny
+from repro.models.model import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S + 1), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[1], (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vis"] = jax.random.normal(
+            ks[1], (B, cfg.vis_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_and_grad(name):
+    cfg = tiny(get_arch(name))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+    # gradient must reach the embedding and the deepest block params
+    gnorm = sum(float(jnp.sum(jnp.abs(l))) for l in leaves)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode_consistency(name):
+    """Greedy decode over the prompt suffix must match teacher forcing."""
+    cfg = tiny(get_arch(name))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    max_len = S + 8 + (cfg.vis_tokens if cfg.family == "vlm" else 0)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :S]       # prompt
+    logits_pre, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len))(params, pre_batch)
+    assert np.all(np.isfinite(np.asarray(logits_pre, np.float32)))
+
+    # one decode step must equal the teacher-forced next-position logits
+    next_tok = batch["tokens"][:, S]
+    pos = S + (cfg.vis_tokens if cfg.family == "vlm" else 0)
+    logits_dec, caches = jax.jit(model.decode_step)(
+        params, next_tok, caches, jnp.int32(pos))
+    assert logits_dec.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits_dec, np.float32)))
+
+    full_batch = dict(batch)
+    full_batch["tokens"] = jnp.concatenate(
+        [batch["tokens"][:, :S], next_tok[:, None]], axis=1)
+    logits_tf, _ = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len + 1))(params, full_batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_tf[:, 0], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_analytics():
+    """init() parameter count must match ArchConfig.n_params analytics
+    (within the small terms the analytic formula rounds away)."""
+    for name in sorted(ARCHS):
+        cfg = tiny(get_arch(name))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.n_params()
+        assert abs(actual - analytic) / max(actual, 1) < 0.15, (
+            name, actual, analytic)
+
+
+def test_full_configs_match_brief():
+    """Exact numbers from the assignment brief."""
+    a = get_arch("arctic-480b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads) == (35, 7168, 56, 8)
+    assert (a.n_experts, a.top_k, a.d_ff, a.vocab) == (128, 2, 4864, 32000)
+    assert a.moe_dense_residual
+    q = get_arch("qwen2-moe-a2.7b")
+    assert (q.n_experts, q.top_k, q.n_shared_experts) == (60, 4, 4)
+    g = get_arch("gemma3-27b")
+    assert (g.n_layers, g.d_model, g.d_ff, g.vocab) == (62, 5376, 21504, 262144)
+    assert (g.local_per_global, g.n_kv_heads) == (5, 16)
+    m = get_arch("mamba2-370m")
+    assert (m.n_layers, m.d_model, m.ssm_state, m.vocab) == (48, 1024, 128, 50280)
+    z = get_arch("zamba2-7b")
+    assert (z.n_layers, z.d_model, z.ssm_state, z.vocab) == (81, 3584, 64, 32000)
+    assert z.shared_attn_every > 0
+    w = get_arch("whisper-medium")
+    assert (w.n_layers, w.enc_layers, w.d_model, w.vocab) == (24, 24, 1024, 51865)
+    i = get_arch("internvl2-26b")
+    assert (i.n_layers, i.d_model, i.n_heads, i.n_kv_heads, i.d_ff,
+            i.vocab) == (48, 6144, 48, 8, 16384, 92553)
+    for nm, L, D, H, K, F, V in [
+            ("qwen3-1.7b", 28, 2048, 16, 8, 6144, 151936),
+            ("qwen1.5-32b", 64, 5120, 40, 40, 27392, 152064),
+            ("qwen2-7b", 28, 3584, 28, 4, 18944, 152064)]:
+        c = get_arch(nm)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, D, H, K, F, V), nm
+
+
+@pytest.mark.parametrize("name", ["qwen3-1.7b", "gemma3-27b"])
+def test_blocked_attention_matches_naive(name):
+    """§Perf path equivalence: blocked (XLA-flash) == naive logits."""
+    import dataclasses
+    cfg = tiny(get_arch(name))
+    cfg_b = dataclasses.replace(cfg, attn_impl="blocked", attn_chunk=16)
+    m1, m2 = build_model(cfg), build_model(cfg_b)
+    params = m1.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    l1 = jax.jit(m1.loss)(params, batch)
+    l2 = jax.jit(m2.loss)(params, batch)
+    assert float(l1) == pytest.approx(float(l2), rel=2e-4)
+    g1 = jax.jit(jax.grad(m1.loss))(params, batch)
+    g2 = jax.jit(jax.grad(m2.loss))(params, batch)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_fused_projections_match_unfused():
+    """§Perf fusion: packing unfused wq/wk/wv (and gate|up) into the fused
+    layout must give bit-identical logits."""
+    import dataclasses
+    cfg = tiny(get_arch("qwen2-7b"))          # has qkv biases
+    cfg_f = dataclasses.replace(cfg, fused_qkv=True, fused_gate_up=True)
+    m, mf = build_model(cfg), build_model(cfg_f)
+    params = m.init(jax.random.PRNGKey(0))
+
+    def pack_block(b):
+        a = dict(b["attn"])
+        a["wqkv"] = jnp.concatenate([a.pop("wq"), a.pop("wk"),
+                                     a.pop("wv")], axis=1)
+        if "bq" in a:
+            a["bqkv"] = jnp.concatenate([a.pop("bq"), a.pop("bk"),
+                                         a.pop("bv")])
+        ml = dict(b["mlp"])
+        ml["w_gate_up"] = jnp.concatenate([ml.pop("w_gate"),
+                                           ml.pop("w_up")], axis=1)
+        return {**b, "attn": a, "mlp": ml}
+
+    fused = dict(params)
+    fused["blocks"] = jax.vmap(pack_block)(params["blocks"])
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    l1 = float(jax.jit(m.loss)(params, batch))
+    l2 = float(jax.jit(mf.loss)(fused, batch))
+    assert l1 == pytest.approx(l2, rel=1e-6)
+
+
+@pytest.mark.parametrize("name", ["mamba2-370m", "zamba2-7b", "gemma3-27b"])
+def test_long_context_decode_path(name):
+    """The sub-quadratic archs that run long_500k: exercise an actually-
+    long decode (reduced dims, 2k cache) — ring-correctness of positions,
+    window masks, and SSM state carry at depth."""
+    import dataclasses
+    cfg = tiny(get_arch(name))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S, extra = 48, 3
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, S),
+                                          0, cfg.vocab)}
+    logits, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, 2048))(params, batch)
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    for i in range(extra):
+        logits, caches = decode(params, tok, caches, jnp.int32(S + i))
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)

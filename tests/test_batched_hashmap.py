@@ -1,0 +1,138 @@
+"""Tests for the JAX-native batched durable hash map."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched as B
+
+NB = 64
+
+
+def test_insert_lookup_roundtrip():
+    st = B.make_state(1024, NB)
+    ks = jnp.arange(100, 200)
+    st, ok = B.insert(st, ks, ks * 3, NB)
+    assert bool(ok.all())
+    found, vals = B.lookup(st, ks, NB)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ks) * 3)
+    found2, _ = B.lookup(st, jnp.arange(500, 520), NB)
+    assert not bool(found2.any())
+
+
+def test_duplicate_insert_fails_and_delete_resurrect():
+    st = B.make_state(256, NB)
+    st, ok1 = B.insert(st, jnp.array([7, 7, 9]), jnp.array([1, 2, 3]), NB)
+    # scan order linearization: first 7 wins, second fails
+    assert list(np.asarray(ok1)) == [True, False, True]
+    _, vals = B.lookup(st, jnp.array([7]), NB)
+    assert int(vals[0]) == 1
+    st, okd = B.delete(st, jnp.array([7, 100]), NB)
+    assert list(np.asarray(okd)) == [True, False]
+    found, _ = B.lookup(st, jnp.array([7]), NB)
+    assert not bool(found[0])
+    st, ok2 = B.insert(st, jnp.array([7]), jnp.array([42]), NB)
+    assert bool(ok2[0])
+    found, vals = B.lookup(st, jnp.array([7]), NB)
+    assert bool(found[0]) and int(vals[0]) == 42
+
+
+def test_vs_python_model_random_ops():
+    rng = np.random.default_rng(3)
+    st = B.make_state(4096, NB)
+    model = {}
+    for _ in range(20):
+        ks = rng.integers(0, 60, size=32)
+        op = rng.choice(["insert", "delete"])
+        if op == "insert":
+            vs = rng.integers(0, 1000, size=32)
+            st, ok = B.insert(st, jnp.asarray(ks), jnp.asarray(vs), NB)
+            for i, (k, v) in enumerate(zip(ks, vs)):
+                want = k not in model
+                assert bool(ok[i]) == want, (k, v)
+                if want:
+                    model[int(k)] = int(v)
+        else:
+            st, ok = B.delete(st, jnp.asarray(ks), NB)
+            seen = set()
+            for i, k in enumerate(ks):
+                want = int(k) in model and int(k) not in seen
+                # duplicate deletes in one batch: only the first succeeds
+                assert bool(ok[i]) == (int(k) in model)
+                model.pop(int(k), None)
+        probe = rng.integers(0, 60, size=64)
+        found, vals = B.lookup(st, jnp.asarray(probe), NB)
+        for i, k in enumerate(probe):
+            assert bool(found[i]) == (int(k) in model)
+            if int(k) in model:
+                assert int(vals[i]) == model[int(k)]
+
+
+def test_flush_fence_accounting_o1_per_op():
+    """2 flushes + 2 fences per fresh insert; 0 of each per lookup —
+    the batched map mirrors the instruction-level NVTraverse economics."""
+    st = B.make_state(2048, NB)
+    st, ok = B.insert(st, jnp.arange(1, 101), jnp.arange(1, 101), NB)
+    assert int(st.flushes) == 200 and int(st.fences) == 200
+    f0, n0 = int(st.flushes), int(st.fences)
+    B.lookup(st, jnp.arange(1, 101), NB)   # journey: no persistence
+    assert int(st.flushes) == f0 and int(st.fences) == n0
+    st, _ = B.delete(st, jnp.arange(1, 11), NB)
+    assert int(st.flushes) == f0 + 10 and int(st.fences) == n0 + 20
+
+
+def test_crash_prefix_durability():
+    """A crash mid-batch leaves exactly a prefix of the serialized batch —
+    replaying the committed prefix reproduces the recovered state."""
+    rng = np.random.default_rng(0)
+    ks = jnp.asarray(rng.permutation(np.arange(1, 65)))
+    vs = ks * 7
+    full = B.make_state(512, NB)
+    full, _ = B.insert(full, ks, vs, NB)
+    for n_committed in (0, 1, 17, 63):
+        st = B.make_state(512, NB)
+        st, _ = B.insert(st, ks[:n_committed], vs[:n_committed], NB)
+        found, _ = B.lookup(st, ks, NB)
+        assert int(found.sum()) == n_committed
+        # every committed key present, none of the uncommitted
+        assert bool(found[:n_committed].all()) if n_committed else True
+
+
+def test_chain_stats():
+    st = B.make_state(4096, 8)
+    st, _ = B.insert(st, jnp.arange(1, 801), jnp.arange(1, 801), 8)
+    mx, mean = B.chain_stats(st, 8)
+    assert 800 / 8 * 0.5 < float(mean) < 800 / 8 * 1.5
+    assert int(mx) >= int(mean)
+
+
+def test_cross_check_with_instruction_level_structure():
+    """Same workload through the instruction-level hash table and the
+    batched map: identical abstract contents and same per-op fence count."""
+    from repro.core.hash_table import HashTable
+    from repro.core.pmem import PMem
+    from repro.core.policies import get_policy
+    from repro.core.traversal import run_operation
+
+    ks = list(range(1, 41))
+    mem = PMem(1 << 16)
+    ht = HashTable(mem, n_buckets=NB)
+    pol = get_policy("nvtraverse")
+    mem.counters.reset()
+    for k in ks:
+        run_operation(ht, pol, "insert", (k, k))
+    inst_fences = mem.counters.fences / len(ks)
+
+    st = B.make_state(1024, NB)
+    st, _ = B.insert(st, jnp.asarray(ks), jnp.asarray(ks), NB)
+    batched_fences = int(st.fences) / len(ks)
+    assert ht.contents() == {k: k for k in ks}
+    found, _ = B.lookup(st, jnp.asarray(ks), NB)
+    assert bool(found.all())
+    # Both are O(1) fences/op.  Instruction-level = exactly 3 (Protocol 1
+    # makePersistent fence + pre-CAS fence + return fence).  The batched
+    # map's serialized scan elides the Protocol-1 fence — every field its
+    # traversal reads was persisted before the previous op's return fence —
+    # a beyond-paper optimization recorded in EXPERIMENTS.md (3 → 2).
+    assert inst_fences == pytest.approx(3.0)
+    assert batched_fences == pytest.approx(2.0)

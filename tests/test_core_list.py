@@ -1,0 +1,271 @@
+"""Core reproduction tests: PMem semantics + Harris list + checkers."""
+import numpy as np
+import pytest
+
+from repro.core.harris_list import HarrisList
+from repro.core.instr import TraversalWriteError, pack, unpack, is_marked
+from repro.core.linearizability import (check_durably_linearizable,
+                                        check_linearizable, explain_failure)
+from repro.core.pmem import PMem
+from repro.core.policies import get_policy
+from repro.core.scheduler import Interleaver
+from repro.core.traversal import run_operation
+
+
+# --------------------------------------------------------------------- #
+# PMem semantics                                                         #
+# --------------------------------------------------------------------- #
+def test_pmem_flush_fence_persists():
+    m = PMem(64, line_words=8)
+    m.write(3, 42)
+    assert m.persistent[3] == 0
+    m.flush(3)
+    assert m.persistent[3] == 0          # flush alone is not persistence
+    m.fence()
+    assert m.persistent[3] == 42
+    assert m.counters.flushes == 1 and m.counters.fences == 1
+
+
+def test_pmem_crash_loses_unflushed():
+    m = PMem(64, line_words=8)
+    m.write(3, 42)
+    m.crash(evict="none")
+    assert m.volatile[3] == 0 and m.persistent[3] == 0
+
+
+def test_pmem_crash_eviction_subset():
+    m = PMem(64, line_words=8)
+    m.write(1, 11)    # line 0
+    m.write(9, 99)    # line 1
+    m.crash(evict=[1])                   # only line 1 evicted
+    assert m.persistent[9] == 99 and m.persistent[1] == 0
+    assert m.volatile[1] == 0            # cache reloaded from NVRAM
+
+
+def test_pmem_fence_only_persists_flushed_lines():
+    m = PMem(64, line_words=8)
+    m.write(1, 11)
+    m.write(9, 99)
+    m.flush(9)
+    m.fence()
+    assert m.persistent[9] == 99 and m.persistent[1] == 0
+
+
+def test_pack_unpack_mark():
+    w = pack(88, 0)
+    assert unpack(w) == (88, 0) and not is_marked(w)
+    assert is_marked(w | 1)
+
+
+# --------------------------------------------------------------------- #
+# Harris list: sequential correctness under all three policies           #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy_name", ["volatile", "izraelevitz", "nvtraverse"])
+def test_list_sequential_vs_model(policy_name):
+    rng = np.random.default_rng(0)
+    mem = PMem(1 << 16)
+    ds = HarrisList(mem)
+    policy = get_policy(policy_name)
+    model = {}
+    for _ in range(400):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 40))
+        if op == "insert":
+            got = run_operation(ds, policy, "insert", (k, k * 10))
+            want = k not in model
+            model[k] = k * 10
+        elif op == "delete":
+            got = run_operation(ds, policy, "delete", (k,))
+            want = k in model
+            model.pop(k, None)
+        else:
+            got = run_operation(ds, policy, "find", (k,))
+            want = k in model
+        assert got == want, (op, k)
+        assert ds.contents() == model
+    ds.check_integrity()
+
+
+def test_traverse_may_not_write():
+    mem = PMem(1 << 12)
+    ds = HarrisList(mem)
+
+    class Evil(HarrisList):
+        pass
+
+    evil = Evil.__new__(Evil)
+    evil.__dict__.update(ds.__dict__)
+
+    def bad_traverse(ctx, entry, op, args):
+        ctx.write(entry + 1, 7)
+
+    evil.traverse = bad_traverse
+    with pytest.raises(TraversalWriteError):
+        run_operation(evil, get_policy("nvtraverse"), "find", (1,))
+
+
+# --------------------------------------------------------------------- #
+# flush/fence economy — the paper's core claim                           #
+# --------------------------------------------------------------------- #
+def _fill(ds, policy, keys):
+    for k in keys:
+        run_operation(ds, policy, "insert", (k, k))
+
+
+def test_nvtraverse_zero_persistence_in_traverse():
+    mem = PMem(1 << 16)
+    ds = HarrisList(mem)
+    pol = get_policy("nvtraverse")
+    _fill(ds, pol, range(0, 200, 2))
+    mem.counters.reset()
+    for k in range(1, 100, 7):
+        run_operation(ds, pol, "find", (k,))
+        run_operation(ds, pol, "insert", (k, k))
+        run_operation(ds, pol, "delete", (k,))
+    assert mem.counters.traverse_flushes == 0
+    assert mem.counters.traverse_fences == 0
+
+
+def test_nvtraverse_constant_fences_izraelevitz_linear():
+    """NVTraverse: O(1) fences/op regardless of size; Izraelevitz: O(path)."""
+    results = {}
+    for size in (64, 512):
+        for name in ("nvtraverse", "izraelevitz"):
+            mem = PMem(1 << 18)
+            ds = HarrisList(mem)
+            pol = get_policy(name)
+            _fill(ds, get_policy("nvtraverse"), range(size))
+            mem.counters.reset()
+            n_ops = 50
+            for k in range(n_ops):
+                run_operation(ds, pol, "find", (int(k * size / n_ops),))
+            results[(name, size)] = mem.counters.fences / n_ops
+    # NVTraverse find: exactly 2 fences (makePersistent + before-return)
+    assert results[("nvtraverse", 64)] <= 3
+    assert results[("nvtraverse", 512)] <= 3
+    # size-independent for NVTraverse ...
+    assert results[("nvtraverse", 512)] == results[("nvtraverse", 64)]
+    # ... but grows ~8x for Izraelevitz when the list grows 8x
+    ratio = results[("izraelevitz", 512)] / results[("izraelevitz", 64)]
+    assert ratio > 4.0
+    # and the headline gap: >25x fewer fences at size 512 (paper: 13.5-39.6x)
+    assert results[("izraelevitz", 512)] / results[("nvtraverse", 512)] > 25
+
+
+# --------------------------------------------------------------------- #
+# concurrent linearizability (no crash)                                  #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(5))
+def test_list_concurrent_linearizable(seed):
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 16)
+    ds = HarrisList(mem)
+    pol = get_policy("nvtraverse")
+    init_keys = list(range(0, 20, 2))
+    _fill(ds, pol, init_keys)
+    ops = []
+    for _ in range(24):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 20))
+        ops.append((op, (k, k) if op == "insert" else (k,)))
+    recs = Interleaver(ds, pol, ops, seed=seed).run()
+    assert all(r.completed for r in recs)
+    ds.check_integrity()
+    assert check_linearizable(recs, initial_keys=init_keys), \
+        explain_failure(recs, ds.contents().keys(), init_keys)
+
+
+# --------------------------------------------------------------------- #
+# durable linearizability under crash + recovery (Theorem 4.2)           #
+# --------------------------------------------------------------------- #
+def _crash_trial(policy_name, seed, crash_at, evict, p_evict=0.5):
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 16, seed=seed)
+    ds = HarrisList(mem)
+    pol = get_policy(policy_name)
+    init_keys = list(range(0, 20, 2))
+    _fill(ds, get_policy("nvtraverse"), init_keys)
+    mem.persist_all()
+    ops = []
+    for _ in range(20):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 20))
+        ops.append((op, (k, k) if op == "insert" else (k,)))
+    il = Interleaver(ds, pol, ops, seed=seed)
+    recs = il.run(crash_at=crash_at, evict=evict, p_evict=p_evict)
+    if not il.crashed:   # schedule finished before the crash point
+        return None
+    ds.disconnect()      # recovery = Supplement 1 (§4 "Recovery")
+    ds.check_integrity(require_unmarked=True)
+    recovered = set(ds.contents().keys())
+    ok = check_durably_linearizable(recs, recovered, initial_keys=init_keys)
+    return ok, recs, recovered, init_keys
+
+
+@pytest.mark.parametrize("evict", ["none", "all", "random"])
+@pytest.mark.parametrize("seed", range(4))
+def test_nvtraverse_durably_linearizable(seed, evict):
+    for crash_at in (5, 25, 60, 120, 250):
+        out = _crash_trial("nvtraverse", seed, crash_at, evict)
+        if out is None:
+            continue
+        ok, recs, recovered, init_keys = out
+        assert ok, explain_failure(recs, recovered, init_keys)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_izraelevitz_durably_linearizable(seed):
+    for crash_at in (10, 80, 300):
+        out = _crash_trial("izraelevitz", seed, crash_at, "random")
+        if out is None:
+            continue
+        ok, recs, recovered, init_keys = out
+        assert ok, explain_failure(recs, recovered, init_keys)
+
+
+def test_volatile_policy_is_not_durable():
+    """Sanity for the checker: with no flushes at all, completed updates are
+    lost on crash (evict=none) — the checker must catch at least one such
+    violation across the sweep."""
+    violations = 0
+    trials = 0
+    for seed in range(6):
+        for crash_at in (40, 80, 160, 320):
+            out = _crash_trial("volatile", seed, crash_at, "none")
+            if out is None:
+                continue
+            trials += 1
+            if not out[0]:
+                violations += 1
+    assert trials > 0
+    assert violations > 0, "checker failed to catch volatile-policy data loss"
+
+
+@pytest.mark.parametrize("evict", ["none", "random"])
+def test_list_supplement2_original_parent_variant(evict):
+    """The Supplement 2 path (ensureReachable flushes the location stored
+    in the node's original-parent field instead of the Lemma 4.1 returned
+    parent) must be equally durable."""
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        mem = PMem(1 << 16, seed=seed)
+        ds = HarrisList(mem, use_orig_parent=True)
+        pol = get_policy("nvtraverse")
+        init_keys = list(range(0, 12, 2))
+        for k in init_keys:
+            run_operation(ds, pol, "insert", (k, k))
+        mem.persist_all()
+        ops = []
+        for _ in range(14):
+            op = rng.choice(["insert", "delete", "find"])
+            k = int(rng.integers(0, 12))
+            ops.append((op, (k, k) if op == "insert" else (k,)))
+        il = Interleaver(ds, pol, ops, seed=seed)
+        recs = il.run(crash_at=40, evict=evict)
+        if not il.crashed:
+            continue
+        ds.disconnect()
+        ds.check_integrity(require_unmarked=True)
+        assert check_durably_linearizable(
+            recs, set(ds.contents()), initial_keys=init_keys), \
+            explain_failure(recs, set(ds.contents()), init_keys)

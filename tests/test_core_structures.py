@@ -1,0 +1,240 @@
+"""Cross-structure tests: BST, hash table, skiplist, queue.
+
+Each set-semantics structure goes through the same gauntlet as the list:
+sequential-vs-model, flush economy, concurrent linearizability, and
+durable linearizability under crash + recovery (Theorem 4.2).
+"""
+import numpy as np
+import pytest
+
+from repro.core.bst import ExternalBST
+from repro.core.hash_table import HashTable
+from repro.core.linearizability import (check_durably_linearizable,
+                                        check_linearizable,
+                                        check_queue_durably_linearizable,
+                                        explain_failure)
+from repro.core.pmem import PMem
+from repro.core.policies import get_policy
+from repro.core.queue import MSQueue
+from repro.core.scheduler import Interleaver
+from repro.core.skiplist import SkipList
+from repro.core.traversal import run_operation
+
+FACTORIES = {
+    "bst": lambda mem: ExternalBST(mem),
+    "hash": lambda mem: HashTable(mem, n_buckets=4),
+    "skiplist": lambda mem: SkipList(mem, max_level=6),
+}
+
+
+def _fill(ds, keys):
+    pol = get_policy("nvtraverse")
+    for k in keys:
+        run_operation(ds, pol, "insert", (k, k * 10))
+
+
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", FACTORIES)
+@pytest.mark.parametrize("policy_name", ["volatile", "nvtraverse"])
+def test_sequential_vs_model(name, policy_name):
+    rng = np.random.default_rng(7)
+    mem = PMem(1 << 17)
+    ds = FACTORIES[name](mem)
+    policy = get_policy(policy_name)
+    model = {}
+    for _ in range(500):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 50))
+        if op == "insert":
+            got = run_operation(ds, policy, "insert", (k, k * 10))
+            want = k not in model
+            model[k] = k * 10
+        elif op == "delete":
+            got = run_operation(ds, policy, "delete", (k,))
+            want = k in model
+            model.pop(k, None)
+        else:
+            got = run_operation(ds, policy, "find", (k,))
+            want = k in model
+        assert got == want, (op, k)
+        assert ds.contents() == model
+    ds.check_integrity()
+
+
+@pytest.mark.parametrize("name", FACTORIES)
+def test_zero_persistence_in_traverse(name):
+    mem = PMem(1 << 17)
+    ds = FACTORIES[name](mem)
+    _fill(ds, range(0, 128, 2))
+    mem.counters.reset()
+    pol = get_policy("nvtraverse")
+    for k in range(1, 60, 5):
+        run_operation(ds, pol, "find", (k,))
+        run_operation(ds, pol, "insert", (k, 1))
+        run_operation(ds, pol, "delete", (k,))
+    assert mem.counters.traverse_flushes == 0
+    assert mem.counters.traverse_fences == 0
+
+
+@pytest.mark.parametrize("name", FACTORIES)
+def test_constant_fences_per_find(name):
+    """O(1) fences per lookup regardless of structure size."""
+    per_size = {}
+    for size in (32, 256):
+        mem = PMem(1 << 18)
+        ds = FACTORIES[name](mem)
+        _fill(ds, range(size))
+        mem.counters.reset()
+        pol = get_policy("nvtraverse")
+        for k in range(0, size, max(1, size // 16)):
+            run_operation(ds, pol, "find", (k,))
+        per_size[size] = mem.counters.fences / (mem.counters.cas + 16)
+    assert per_size[256] <= per_size[32] * 1.5 + 1e-9
+
+
+@pytest.mark.parametrize("name", FACTORIES)
+@pytest.mark.parametrize("seed", range(3))
+def test_concurrent_linearizable(name, seed):
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 17)
+    ds = FACTORIES[name](mem)
+    init_keys = list(range(0, 16, 2))
+    _fill(ds, init_keys)
+    ops = []
+    for _ in range(20):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 16))
+        ops.append((op, (k, k) if op == "insert" else (k,)))
+    pol = get_policy("nvtraverse")
+    recs = Interleaver(ds, pol, ops, seed=seed).run()
+    assert all(r.completed for r in recs)
+    ds.check_integrity()
+    assert check_linearizable(recs, initial_keys=init_keys), \
+        explain_failure(recs, ds.contents().keys(), init_keys)
+
+
+@pytest.mark.parametrize("name", FACTORIES)
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("evict", ["none", "all", "random"])
+def test_durably_linearizable_under_crash(name, seed, evict):
+    for crash_at in (8, 30, 90, 200):
+        rng = np.random.default_rng(seed * 1000 + crash_at)
+        mem = PMem(1 << 17, seed=seed)
+        ds = FACTORIES[name](mem)
+        init_keys = list(range(0, 16, 2))
+        _fill(ds, init_keys)
+        mem.persist_all()
+        ops = []
+        for _ in range(16):
+            op = rng.choice(["insert", "delete", "find"])
+            k = int(rng.integers(0, 16))
+            ops.append((op, (k, k) if op == "insert" else (k,)))
+        il = Interleaver(ds, get_policy("nvtraverse"), ops, seed=seed)
+        recs = il.run(crash_at=crash_at, evict=evict)
+        if not il.crashed:
+            continue
+        ds.disconnect()
+        ds.check_integrity(require_unmarked=True)
+        recovered = set(ds.contents().keys())
+        assert check_durably_linearizable(recs, recovered,
+                                          initial_keys=init_keys), \
+            explain_failure(recs, recovered, init_keys)
+
+
+# --------------------------------------------------------------------- #
+# skiplist specifics                                                     #
+# --------------------------------------------------------------------- #
+def test_skiplist_index_rebuild_deterministic():
+    mem = PMem(1 << 17)
+    ds = SkipList(mem, max_level=6)
+    _fill(ds, range(64))
+    before = {l: list(v) for l, v in ds.index.items()}
+    ds.rebuild_index()
+    assert {l: list(v) for l, v in ds.index.items()} == before
+
+
+def test_skiplist_index_is_volatile_auxiliary():
+    """Crash wipes the towers; recovery rebuilds them; contents survive."""
+    mem = PMem(1 << 17)
+    ds = SkipList(mem, max_level=6)
+    _fill(ds, range(32))
+    mem.crash(evict="none")     # everything explicit was already fenced
+    ds.index = {}               # towers are gone (volatile)
+    ds.disconnect()             # recovery path (also rebuilds the index)
+    assert set(ds.contents().keys()) == set(range(32))
+    pol = get_policy("nvtraverse")
+    assert run_operation(ds, pol, "find", (17,)) is True
+
+
+# --------------------------------------------------------------------- #
+# queue                                                                  #
+# --------------------------------------------------------------------- #
+def test_queue_sequential_fifo():
+    mem = PMem(1 << 16)
+    q = MSQueue(mem)
+    pol = get_policy("nvtraverse")
+    for v in range(10):
+        assert run_operation(q, pol, "enqueue", (v,)) is True
+    assert q.contents() == list(range(10))
+    for v in range(10):
+        assert run_operation(q, pol, "dequeue", ()) == v
+    assert run_operation(q, pol, "dequeue", ()) is None
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_queue_concurrent_linearizable(seed):
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 16)
+    q = MSQueue(mem)
+    ops = []
+    v = 100
+    for _ in range(11):
+        if rng.random() < 0.6:
+            ops.append(("enqueue", (v,)))
+            v += 1
+        else:
+            ops.append(("dequeue", ()))
+    recs = Interleaver(q, get_policy("nvtraverse"), ops, seed=seed).run()
+    assert all(r.completed for r in recs)
+    q.check_integrity()
+    assert check_queue_durably_linearizable(recs, q.contents())
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("evict", ["none", "all", "random"])
+def test_queue_durably_linearizable_under_crash(seed, evict):
+    for crash_at in (6, 20, 60):
+        rng = np.random.default_rng(seed)
+        mem = PMem(1 << 16, seed=seed)
+        q = MSQueue(mem)
+        ops = []
+        v = 100
+        for _ in range(12):
+            if rng.random() < 0.6:
+                ops.append(("enqueue", (v,)))
+                v += 1
+            else:
+                ops.append(("dequeue", ()))
+        il = Interleaver(q, get_policy("nvtraverse"), ops, seed=seed)
+        recs = il.run(crash_at=crash_at, evict=evict)
+        if not il.crashed:
+            continue
+        q.disconnect()
+        q.check_integrity(require_unmarked=True)
+        assert check_queue_durably_linearizable(recs, q.contents())
+
+
+def test_queue_supplement2_original_parent():
+    """ensureReachable flushes the location recorded in the node's
+    original-parent field (Supplement 2), not a traversal-returned parent."""
+    mem = PMem(1 << 16)
+    q = MSQueue(mem)
+    pol = get_policy("nvtraverse")
+    run_operation(q, pol, "enqueue", (5,))
+    run_operation(q, pol, "enqueue", (6,))
+    # second node's original parent is the first node's next field
+    from repro.core.queue import NXT, OPAR
+    from repro.core.instr import unpack
+    first = unpack(int(mem.volatile[q.head + NXT]))[0]
+    second = unpack(int(mem.volatile[first + NXT]))[0]
+    assert int(mem.volatile[second + OPAR]) == first + NXT

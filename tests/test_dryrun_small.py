@@ -1,0 +1,66 @@
+"""Fast CI variant of the multi-pod dry-run: tiny configs on an 8-host-
+device (2,2,2) pod mesh in a subprocess (the 512-device production matrix
+runs via launch/dryrun.py; its artifacts are validated here too)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, jax
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_arch, tiny
+from repro.launch.cells import make_cell, lower_cell
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+results = {}
+for name in ["qwen3-1.7b", "qwen2-moe-a2.7b", "mamba2-370m", "zamba2-7b",
+             "whisper-medium"]:
+    cfg = tiny(get_arch(name))
+    cfg = dataclasses.replace(cfg, d_model=64, n_heads=2, n_kv_heads=2,
+                              d_head=32, microbatches=2)
+    for kind, shape in [("train", ShapeConfig("t", 64, 8, "train")),
+                        ("decode", ShapeConfig("d", 64, 8, "decode"))]:
+        cell = make_cell(cfg, shape, mesh)
+        compiled = lower_cell(cell, mesh).compile()
+        results[f"{name}:{kind}"] = compiled.memory_analysis(
+            ).temp_size_in_bytes
+print("OK", len(results))
+"""
+
+
+@pytest.mark.slow
+def test_small_multipod_mesh_lowers():
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"},
+                         cwd=Path(__file__).parent.parent, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK 10" in out.stdout
+
+
+def test_production_dryrun_artifacts_complete():
+    """The 512-device matrix must exist and be failure-free: 80 cells =
+    10 archs x 4 shapes x 2 meshes, each 'ok' or a documented skip."""
+    d = Path(__file__).parent.parent / "benchmarks/results/dryrun"
+    if not d.exists():
+        pytest.skip("production dry-run not executed in this checkout")
+    recs = [json.loads(p.read_text()) for p in d.glob("*.json")]
+    assert len(recs) >= 80
+    by_status = {}
+    for r in recs:
+        by_status.setdefault(r["status"], []).append(r)
+    assert not by_status.get("error"), [
+        (r["arch"], r["shape"]) for r in by_status["error"]]
+    assert len(by_status.get("skipped", [])) == 14   # 7 archs x 2 meshes
+    # every ok cell carries the memory analysis the roofline needs
+    for r in by_status["ok"]:
+        assert "temp_size_in_bytes" in r and "argument_size_in_bytes" in r
+    # single-pod ok cells carry extrapolated cost terms
+    singles = [r for r in by_status["ok"] if r["mesh"] == "single"]
+    assert all("cost" in r for r in singles)

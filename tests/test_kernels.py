@@ -1,0 +1,163 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle
+(deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.nvt_probe.ops import nvt_probe
+from repro.kernels.nvt_probe.ref import tiles_from_hashmap
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+
+# --------------------------------------------------------------------- #
+# flash attention                                                        #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,K,dh,bq,bk", [
+    (1, 128, 128, 2, 2, 64, 64, 64),      # MHA square
+    (2, 256, 256, 4, 2, 64, 128, 64),     # GQA 2:1
+    (1, 256, 256, 8, 2, 32, 64, 128),     # GQA 4:1, small head
+    (2, 64, 192, 2, 1, 128, 64, 64),      # rectangular, MQA
+])
+def test_flash_attention_sweep(B, Sq, Sk, H, K, dh, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, dh), dtype)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for causal in (True, False):
+        out = flash_attention(q, k, v, causal=causal, impl="pallas",
+                              interpret=True, block_q=bq, block_k=bk)
+        ref = flash_attention(q, k, v, causal=causal, impl="xla")
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 4, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 4, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          impl="pallas", interpret=True,
+                          block_q=64, block_k=64)
+    ref = flash_attention(q, k, v, causal=True, window=window, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel agrees with the model's attention_scores path."""
+    from repro.models.layers import attention_scores, causal_mask
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, K, dh = 2, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, impl="pallas",
+                          interpret=True, block_q=64, block_k=64)
+    ref = attention_scores(q, k, v, causal_mask(S, S, 0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# SSD scan                                                               #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 96, 2, 64, 32, 32),     # padded final chunk (96 = 3*32)
+    (2, 80, 2, 16, 16, 32),     # uneven: pad path
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, N)) * 0.5).astype(dtype)
+    out = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, impl="pallas",
+                   interpret=True)
+    ref = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, impl="xla")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_kernel_matches_model_block():
+    """Kernel == the model's chunked SSD == sequential recurrence."""
+    from repro.models.mamba2 import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, H, P, N = 2, 128, 4, 32, 16
+    xh = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    out = ssd_scan(xh, dt, A, Bm, Cm, chunk=32, impl="pallas",
+                   interpret=True)
+    ref, _ = ssd_chunked(xh, dt, A, Bm, Cm, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# NVTraverse probe                                                       #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("NB,cap,nq", [(64, 16, 128), (256, 32, 256),
+                                       (16, 8, 64)])
+def test_nvt_probe_sweep(NB, cap, nq):
+    rng = np.random.default_rng(0)
+    keys = rng.choice(np.arange(1, 10_000), size=NB * cap // 2,
+                      replace=False).astype(np.int32)
+    from repro.kernels.nvt_probe.ref import mix32_np
+    kt = np.zeros((NB, cap), np.int32)
+    vt = np.zeros((NB, cap), np.int32)
+    slots = np.zeros(NB, np.int32)
+    inserted = {}
+    for k in keys:
+        b = int(mix32_np(k) % np.uint32(NB))
+        if slots[b] < cap:
+            kt[b, slots[b]] = k
+            vt[b, slots[b]] = k * 3
+            slots[b] += 1
+            inserted[int(k)] = int(k) * 3
+    queries = rng.integers(1, 10_000, size=nq).astype(np.int32)
+    found, vals = nvt_probe(jnp.asarray(kt), jnp.asarray(vt),
+                            jnp.asarray(queries), impl="pallas",
+                            interpret=True, block_q=64)
+    rf, rv = nvt_probe(jnp.asarray(kt), jnp.asarray(vt),
+                       jnp.asarray(queries), impl="xla")
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(rf))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    for i, qk in enumerate(queries):
+        assert bool(found[i]) == (int(qk) in inserted)
+        if int(qk) in inserted:
+            assert int(vals[i]) == inserted[int(qk)]
+
+
+def test_nvt_probe_cross_checks_chain_hashmap():
+    """Kernel on dense tiles == chain walking on the jitted durable map —
+    the journey gives identical answers in both layouts."""
+    from repro.core import batched as B
+    NB = 32
+    st = B.make_state(512, NB)
+    ks = jnp.arange(1, 101)
+    st, _ = B.insert(st, ks, ks * 7, NB)
+    st, _ = B.delete(st, jnp.arange(1, 31), NB)
+    kt, vt = tiles_from_hashmap(st, NB, cap=32)
+    queries = jnp.arange(1, 121)
+    found, vals = nvt_probe(kt, vt, queries, impl="pallas",
+                            interpret=True, block_q=64)
+    cf, cv = B.lookup(st, queries, NB)
+    np.testing.assert_array_equal(np.asarray(found, bool), np.asarray(cf))
+    np.testing.assert_array_equal(
+        np.asarray(vals) * np.asarray(found),
+        np.asarray(cv) * np.asarray(cf).astype(np.int32))

@@ -1,0 +1,65 @@
+"""Validation of EXPERIMENTS.md §Repro against the paper's own claims.
+
+These run the benchmark cost model at reduced op counts; the full sweeps
+are in benchmarks/.
+"""
+import pytest
+
+from benchmarks.paper_figures import run_workload
+
+
+@pytest.fixture(scope="module")
+def list_sweep():
+    out = {}
+    for size in (256, 1024, 4096):
+        for pol in ("volatile", "izraelevitz", "nvtraverse"):
+            out[(size, pol)] = run_workload("list", pol, size=size,
+                                            update_pct=20, n_ops=150)
+    return out
+
+
+def test_nvtraverse_vs_izraelevitz_in_paper_band(list_sweep):
+    """Paper §5.2: 13.5×–39.6× over Izraelevitz on lists, growing with
+    size (256→8192).  Our cost model must land inside/near that band and
+    reproduce the growth."""
+    r256 = (list_sweep[(256, "izraelevitz")]["t_op_us"]
+            / list_sweep[(256, "nvtraverse")]["t_op_us"])
+    r4096 = (list_sweep[(4096, "izraelevitz")]["t_op_us"]
+             / list_sweep[(4096, "nvtraverse")]["t_op_us"])
+    assert 10.0 < r256 < 45.0, r256
+    assert 20.0 < r4096 < 60.0, r4096
+    assert r4096 > r256          # the gap grows with traversal length
+
+
+def test_volatile_gap_closes_with_size(list_sweep):
+    """Paper §5.2: non-durable wins ~2.9× on small lists; the difference
+    'becomes less pronounced, and even inverts, as the list grows'."""
+    g256 = (list_sweep[(256, "nvtraverse")]["t_op_us"]
+            / list_sweep[(256, "volatile")]["t_op_us"])
+    g4096 = (list_sweep[(4096, "nvtraverse")]["t_op_us"]
+             / list_sweep[(4096, "volatile")]["t_op_us"])
+    assert g256 > 1.15           # durability costs something when short
+    assert g4096 < 1.10          # ...and almost nothing when long
+    assert g4096 < g256
+
+
+def test_fence_economics_mechanism(list_sweep):
+    """The mechanism: NVTraverse fences are O(1)/op, Izraelevitz O(path)."""
+    for size in (256, 4096):
+        assert list_sweep[(size, "nvtraverse")]["fences_per_op"] < 4
+    assert (list_sweep[(4096, "izraelevitz")]["fences_per_op"]
+            > 0.8 * 4096 * 0.9)  # ~= nodes traversed
+
+
+@pytest.mark.parametrize("structure", ["hash", "bst", "skiplist"])
+def test_other_structures_same_economy(structure):
+    nv = run_workload(structure, "nvtraverse", size=512, update_pct=20,
+                      n_ops=100)
+    iz = run_workload(structure, "izraelevitz", size=512, update_pct=20,
+                      n_ops=100)
+    assert nv["fences_per_op"] < 5
+    assert iz["t_op_us"] / nv["t_op_us"] > 2.5, structure
+    # hash table: short chains => small Izraelevitz gap (paper fig 5d);
+    # bst/skiplist: log-depth traversals => bigger gap (figs 5e, 5f)
+    if structure != "hash":
+        assert iz["t_op_us"] / nv["t_op_us"] > 5.0

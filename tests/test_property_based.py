@@ -1,0 +1,169 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.harris_list import HarrisList
+from repro.core.hash_table import HashTable
+from repro.core.linearizability import check_durably_linearizable
+from repro.core.pmem import PMem
+from repro.core.policies import get_policy
+from repro.core.scheduler import Interleaver
+from repro.core.traversal import run_operation
+
+SETTINGS = settings(max_examples=25, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+# --------------------------------------------------------------------- #
+# PMem invariants                                                        #
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.lists(st.tuples(st.integers(0, 63), st.integers(-5, 5)),
+                min_size=1, max_size=40),
+       st.data())
+def test_pmem_fence_exactly_flushed_lines(ops, data):
+    """After any write/flush sequence + fence: persistent == volatile on
+    flushed lines; untouched-by-fence words keep their old value."""
+    m = PMem(64, line_words=8)
+    flushed_lines = set()
+    for addr, val in ops:
+        m.write(addr, val)
+        if data.draw(st.booleans()):
+            m.flush(addr)
+            flushed_lines.add(addr // 8)
+    m.fence()
+    for ln in range(8):
+        lo, hi = ln * 8, ln * 8 + 8
+        if ln in flushed_lines:
+            np.testing.assert_array_equal(m.persistent[lo:hi],
+                                          m.volatile[lo:hi])
+
+
+@SETTINGS
+@given(st.lists(st.tuples(st.integers(0, 63), st.integers(1, 100)),
+                min_size=1, max_size=30),
+       st.sampled_from(["none", "all", "random"]))
+def test_pmem_crash_monotone(ops, evict):
+    """Post-crash persistent state: each word is either its pre-crash
+    persistent value or its volatile value — never anything else; and
+    volatile == persistent afterwards (cache reload)."""
+    m = PMem(64, line_words=8, seed=1)
+    for addr, val in ops:
+        m.write(addr, val)
+    pers_before = m.persistent.copy()
+    vol_before = m.volatile.copy()
+    m.crash(evict=evict)
+    for i in range(64):
+        assert m.persistent[i] in (pers_before[i], vol_before[i])
+    np.testing.assert_array_equal(m.volatile, m.persistent)
+
+
+# --------------------------------------------------------------------- #
+# structure invariants                                                   #
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.lists(st.tuples(st.sampled_from(["insert", "delete", "find"]),
+                          st.integers(0, 15)), min_size=1, max_size=40))
+def test_list_matches_model_set(ops):
+    mem = PMem(1 << 15)
+    ds = HarrisList(mem)
+    pol = get_policy("nvtraverse")
+    model = set()
+    for op, k in ops:
+        got = run_operation(ds, pol, op, (k, k) if op == "insert" else (k,))
+        if op == "insert":
+            assert got == (k not in model)
+            model.add(k)
+        elif op == "delete":
+            assert got == (k in model)
+            model.discard(k)
+        else:
+            assert got == (k in model)
+    assert set(ds.contents()) == model
+    ds.check_integrity()
+
+
+@SETTINGS
+@given(st.integers(0, 10_000), st.integers(0, 400),
+       st.sampled_from(["none", "all", "random"]))
+def test_hash_table_crash_always_durably_linearizable(seed, crash_at, evict):
+    """The flagship property: ANY schedule × ANY crash point × ANY eviction
+    subset recovers to a durably-linearizable state (Theorem 4.2)."""
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 16, seed=seed)
+    ds = HashTable(mem, n_buckets=4)
+    pol = get_policy("nvtraverse")
+    init = [int(k) for k in rng.choice(12, size=4, replace=False)]
+    for k in init:
+        run_operation(ds, pol, "insert", (k, k))
+    mem.persist_all()
+    ops = []
+    for _ in range(10):
+        op = rng.choice(["insert", "delete", "find"])
+        k = int(rng.integers(0, 12))
+        ops.append((op, (k, k) if op == "insert" else (k,)))
+    il = Interleaver(ds, pol, ops, seed=seed)
+    recs = il.run(crash_at=crash_at, evict=evict)
+    if il.crashed:
+        ds.disconnect()
+        ds.check_integrity(require_unmarked=True)
+        assert check_durably_linearizable(
+            recs, set(ds.contents()), initial_keys=init)
+
+
+# --------------------------------------------------------------------- #
+# batched map vs oracle                                                  #
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 30)),
+                min_size=1, max_size=25))
+def test_batched_hashmap_property(ops):
+    import jax.numpy as jnp
+    from repro.core import batched as B
+    st_ = B.make_state(256, 8)
+    model = {}
+    for is_insert, k in ops:
+        if is_insert:
+            st_, ok = B.insert(st_, jnp.array([k]), jnp.array([k * 2]), 8)
+            assert bool(ok[0]) == (k not in model)
+            model[k] = k * 2
+        else:
+            st_, ok = B.delete(st_, jnp.array([k]), 8)
+            assert bool(ok[0]) == (k in model)
+            model.pop(k, None)
+    keys = jnp.arange(1, 31)
+    found, vals = B.lookup(st_, keys, 8)
+    for i, k in enumerate(range(1, 31)):
+        assert bool(found[i]) == (k in model)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint layer                                                       #
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.integers(0, 1000), st.sampled_from(["none", "all", "random"]),
+       st.sampled_from(["shards", "manifest", None]))
+def test_checkpoint_crash_property(seed, evict, crash_after):
+    """Any commit interruption + any eviction: recovery returns the last
+    published step with verified digests."""
+    import tempfile
+    import jax.numpy as jnp
+    from repro.persistence.checkpoint import CheckpointManager
+    tmpdir = tempfile.TemporaryDirectory()
+    root = tmpdir.name
+    mgr = CheckpointManager(root, seed=seed)
+    t1 = {"w": jnp.full((8,), 1.0)}
+    t2 = {"w": jnp.full((8,), 2.0)}
+    mgr.save(1, t1)
+    out = mgr.save(2, t2, crash_after=crash_after)
+    mgr.io.crash(evict=evict)
+    man, tree = CheckpointManager(root).restore(t1)
+    if crash_after is None:
+        assert man.step == 2
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.full((8,), 2.0))
+    else:
+        assert man.step == 1
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.full((8,), 1.0))

@@ -1,0 +1,100 @@
+"""Treiber stack in traversal form: the sixth paper-scope structure."""
+import numpy as np
+import pytest
+
+from repro.core.linearizability import check_stack_durably_linearizable
+from repro.core.pmem import PMem
+from repro.core.policies import get_policy
+from repro.core.scheduler import Interleaver
+from repro.core.stack import TreiberStack
+from repro.core.traversal import run_operation
+
+
+def test_sequential_lifo():
+    mem = PMem(1 << 16)
+    st = TreiberStack(mem)
+    pol = get_policy("nvtraverse")
+    for v in range(10):
+        assert run_operation(st, pol, "push", (v,)) is True
+    assert st.contents() == list(reversed(range(10)))
+    for v in reversed(range(10)):
+        assert run_operation(st, pol, "pop", ()) == v
+    assert run_operation(st, pol, "pop", ()) is None
+
+
+def test_zero_persistence_in_traverse_and_o1_fences():
+    mem = PMem(1 << 16)
+    st = TreiberStack(mem)
+    pol = get_policy("nvtraverse")
+    mem.counters.reset()
+    n = 40
+    for v in range(n):
+        run_operation(st, pol, "push", (v,))
+    for _ in range(n):
+        run_operation(st, pol, "pop", ())
+    assert mem.counters.traverse_flushes == 0
+    assert mem.counters.traverse_fences == 0
+    assert mem.counters.fences / (2 * n) < 4      # O(1) per op
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_concurrent_linearizable(seed):
+    rng = np.random.default_rng(seed)
+    mem = PMem(1 << 16)
+    st = TreiberStack(mem)
+    ops, v = [], 100
+    for _ in range(11):
+        if rng.random() < 0.6:
+            ops.append(("push", (v,)))
+            v += 1
+        else:
+            ops.append(("pop", ()))
+    recs = Interleaver(st, get_policy("nvtraverse"), ops, seed=seed).run()
+    assert all(r.completed for r in recs)
+    st.check_integrity()
+    assert check_stack_durably_linearizable(recs, st.contents())
+
+
+@pytest.mark.parametrize("evict", ["none", "all", "random"])
+@pytest.mark.parametrize("seed", range(3))
+def test_durably_linearizable_under_crash(seed, evict):
+    for crash_at in (5, 18, 50):
+        rng = np.random.default_rng(seed)
+        mem = PMem(1 << 16, seed=seed)
+        st = TreiberStack(mem)
+        ops, v = [], 100
+        for _ in range(12):
+            if rng.random() < 0.6:
+                ops.append(("push", (v,)))
+                v += 1
+            else:
+                ops.append(("pop", ()))
+        il = Interleaver(st, get_policy("nvtraverse"), ops, seed=seed)
+        recs = il.run(crash_at=crash_at, evict=evict)
+        if not il.crashed:
+            continue
+        st.disconnect()
+        st.check_integrity(require_unmarked=True)
+        assert check_stack_durably_linearizable(recs, st.contents())
+
+
+def test_buried_marked_node_is_trimmed():
+    """A push landing between a pop's mark and its swing buries a marked
+    node mid-chain; helps and recovery must both remove it."""
+    mem = PMem(1 << 16)
+    st = TreiberStack(mem)
+    pol = get_policy("nvtraverse")
+    for v in (1, 2, 3):
+        run_operation(st, pol, "push", (v,))
+    # interleave a pop and a push so schedules with burial occur
+    for seed in range(8):
+        m = PMem(1 << 16, seed=seed)
+        s2 = TreiberStack(m)
+        for v in (1, 2, 3):
+            run_operation(s2, pol, "push", (v,))
+        recs = Interleaver(s2, pol, [("pop", ()), ("push", (9,))],
+                           seed=seed).run()
+        s2.disconnect()
+        s2.check_integrity(require_unmarked=True)
+        assert check_stack_durably_linearizable(
+            recs, s2.contents(), initial=[3, 2, 1])

@@ -27,22 +27,116 @@ def bench_batched_hashmap(rows):
     import jax.numpy as jnp
     from repro.core import batched as B
     NB = 1024
-    st = B.make_state(1 << 16, NB)
+    st0 = B.make_state(1 << 16, NB)
     ks = jnp.arange(1, 20_001)
-    t0 = time.time()
-    st, _ = B.insert(st, ks, ks, NB)
+    B.insert(st0, ks, ks, NB)[0].cursor.block_until_ready()   # compile
+    t0 = time.perf_counter()
+    st, _ = B.insert(st0, ks, ks, NB)
     st.cursor.block_until_ready()
-    t_insert = (time.time() - t0) / 20_000 * 1e6
+    t_insert = (time.perf_counter() - t0) / 20_000 * 1e6
     q = jnp.arange(1, 50_001)
     B.lookup(st, q, NB)[0].block_until_ready()   # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(5):
         B.lookup(st, q, NB)[0].block_until_ready()
-    t_lookup = (time.time() - t0) / (5 * 50_000) * 1e6
+    t_lookup = (time.perf_counter() - t0) / (5 * 50_000) * 1e6
     rows.append(("batched_hashmap,insert", t_insert,
                  f"fences_per_op={float(st.fences)/20_000:.2f}"))
     rows.append(("batched_hashmap,lookup", t_lookup,
                  "fences_per_op=0.00"))
+
+
+def bench_nvt(rows, out_json="BENCH_nvt.json"):
+    """The PR's headline comparison, machine-readable.
+
+    (a) sequential-scan vs plan/commit insert engines on a 20k-op batch —
+        identical per-op fence accounting, coalesced batch fences
+        reported alongside;
+    (b) nvt_probe Pallas kernel (streamed bucket tiles, interpret mode on
+        CPU) vs the XLA reference on a table larger than the old
+        whole-table-in-VMEM cap (2 MB), with a bit-exactness check.
+    """
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import batched as B
+    from repro.kernels.nvt_probe.ops import nvt_probe
+    from repro.kernels.nvt_probe.ref import tiles_from_keys
+
+    NB, N_OPS = 1024, 20_000
+    st0 = B.make_state(1 << 16, NB)
+    ks = jnp.arange(1, N_OPS + 1)
+
+    def timed(fn):
+        fn()                                   # compile (excluded)
+        t0 = time.perf_counter()
+        out = fn()
+        return out, (time.perf_counter() - t0)
+
+    (st_scan, _), t_scan = timed(
+        lambda: jax.block_until_ready(B.insert(st0, ks, ks, NB)))
+    (st_par, _, stats), t_par = timed(
+        lambda: jax.block_until_ready(B.insert_parallel(st0, ks, ks, NB)))
+    state_equal = all(
+        bool(jnp.array_equal(getattr(st_scan, f), getattr(st_par, f)))
+        for f in st_scan._fields)
+
+    # (b) streamed probe on a 4 MB table (old single-tile cap: 2 MB)
+    PNB, CAP, Q, BLOCK_NB = 4096, 256, 256, 512
+    rng = np.random.default_rng(0)
+    keys = rng.choice(np.arange(1, 1 << 20), size=PNB * CAP // 4,
+                      replace=False).astype(np.int32)
+    kt, vt = tiles_from_keys(keys, PNB, CAP)
+    queries = jnp.asarray(rng.integers(1, 1 << 20, size=Q).astype(np.int32))
+    (fx, vx), t_xla = timed(lambda: jax.block_until_ready(
+        nvt_probe(kt, vt, queries, impl="xla")))
+    (fp, vp), t_pal = timed(lambda: jax.block_until_ready(
+        nvt_probe(kt, vt, queries, impl="pallas", interpret=True,
+                  block_q=128, block_nb=BLOCK_NB)))
+    bit_exact = bool(jnp.array_equal(fx, fp) and jnp.array_equal(vx, vp))
+
+    report = {
+        "insert": {
+            "batch_ops": N_OPS,
+            "n_buckets": NB,
+            "scan_us_per_op": t_scan / N_OPS * 1e6,
+            "parallel_us_per_op": t_par / N_OPS * 1e6,
+            "speedup": t_scan / t_par,
+            "state_identical": state_equal,
+            "fences_scan": int(st_scan.fences),
+            "fences_parallel": int(st_par.fences),
+            "fences_per_op": float(st_par.fences) / N_OPS,
+            "coalesced_fences": int(stats.coalesced_fences),
+            "coalesced_flushes": int(stats.coalesced_flushes),
+            "max_conflict_group": int(stats.max_group),
+        },
+        "probe": {
+            "n_buckets": PNB,
+            "bucket_cap": CAP,
+            "table_bytes": int(PNB * CAP * 4),
+            "old_vmem_cap_bytes": 2 * 1024 * 1024,
+            "block_nb": BLOCK_NB,
+            "queries": Q,
+            "xla_us_per_query": t_xla / Q * 1e6,
+            "pallas_interpret_us_per_query": t_pal / Q * 1e6,
+            "bit_exact": bit_exact,
+        },
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    ins = report["insert"]
+    rows.append(("nvt,insert_scan", ins["scan_us_per_op"],
+                 f"fences_per_op={ins['fences_per_op']:.2f}"))
+    rows.append(("nvt,insert_parallel", ins["parallel_us_per_op"],
+                 f"speedup={ins['speedup']:.1f}x;"
+                 f"coalesced_fences={ins['coalesced_fences']}"))
+    rows.append(("nvt,probe_xla", report["probe"]["xla_us_per_query"],
+                 f"table_mb={PNB*CAP*4/2**20:.0f}"))
+    rows.append(("nvt,probe_pallas_interpret",
+                 report["probe"]["pallas_interpret_us_per_query"],
+                 f"bit_exact={bit_exact}"))
 
 
 def bench_checkpoint(rows):
@@ -126,14 +220,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
-                         "fig6,hashmap,ckpt,kernels,roofline")
+                         "fig6,hashmap,batched,nvt,ckpt,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
     if only is None or any(o.startswith("fig") for o in only):
         bench_paper_figures(rows, only)
-    if only is None or "hashmap" in only:
+    if only is None or only & {"hashmap", "batched"}:
         bench_batched_hashmap(rows)
+    if only is None or only & {"nvt", "batched"}:
+        bench_nvt(rows)
     if only is None or "ckpt" in only:
         bench_checkpoint(rows)
     if only is None or "kernels" in only:

@@ -5,22 +5,42 @@ and power the durability checker; *this* module is the JAX-native, jittable
 counterpart used by the framework itself (checkpoint-manifest index,
 serving request dedup) and benchmarked for real throughput.
 
-Design: node-pool arrays + bucket heads, operations expressed with
-``lax.scan``/``lax.while_loop`` (no Python loops in the hot path):
+Design: node-pool arrays + bucket heads.  Two update engines share the
+same state and the same abstract semantics:
 
-  * a batch of operations is *serialized deterministically* (scan order is
-    the linearization order), matching the sequential semantics the
-    durability checker validates;
-  * each successful insert performs the NVTraverse commit sequence of
-    Protocol 2 — flush(new node fields), fence, publish CAS, flush(bucket
-    head), fence — so the accounting is **O(1) flushes + 2 fences per
-    update and 0 during the chain walk** (the journey), mirroring the
-    instruction-level structures exactly (cross-checked in tests);
+**Sequential scan engine** (``insert`` / ``delete``) — the oracle.  A
+batch is *serialized deterministically* (scan order is the linearization
+order), each op runs as one ``lax.scan`` step containing a serial
+``lax.while_loop`` chain walk.  Kept as the reference the durability
+checker and the equivalence tests validate against.
+
+**Plan/commit engine** (``insert_parallel`` / ``delete_parallel``) — the
+hot path.  The paper's split, taken literally:
+
+  * *plan* (the journey): every op's destination — bucket, existing node,
+    resurrect-vs-fresh — is located by a fully ``vmap``-parallel chain
+    walk over the pre-batch snapshot, with **zero persistence
+    accounting**;
+  * *commit* (the destination): ops are sorted by bucket (stable, so
+    batch order is preserved inside a group) and conflicts are resolved
+    with segment-scan primitives *within* same-bucket groups only —
+    first-occurrence-of-key wins, fresh node ids are assigned by a
+    prefix-sum over batch order so allocation matches the oracle
+    bit-for-bit, and chains are linked newest-first exactly as the
+    sequential engine would have;
+  * the per-op NVTraverse accounting (Protocol 2: flush(node fields),
+    fence, publish CAS, flush(bucket head), fence — **O(1) flushes +
+    2 fences per update, 0 during the journey**) is preserved identically
+    in ``state.flushes`` / ``state.fences``, while :class:`CommitStats`
+    additionally reports the *coalesced* cost the batch engine actually
+    pays: ops in different buckets share fences (batch fence coalescing
+    à la Zuriel et al.), so the batch needs only ``2 × (largest
+    same-bucket conflict group)`` fences in total;
   * lookups (the traversal) touch no persistence state at all;
-  * crash semantics: an in-flight insert is all-or-nothing because
-    reachability requires the bucket-head update, which is fenced *after*
-    the node contents — ``crash_replay`` in the tests exercises prefix
-    durability.
+  * crash semantics: linearization order is the batch order, so a crash
+    mid-batch durably commits exactly a *prefix* of the batch; replaying
+    that prefix through either engine reproduces the recovered state
+    (``test_commit_engine.py`` exercises this).
 
 The chain-walk lookup is also the reference semantics for the
 ``nvt_probe`` Pallas kernel (kernels/nvt_probe).
@@ -178,6 +198,148 @@ def delete(state: HashMapState, ks: jax.Array, n_buckets: int):
 
     state, ok = jax.lax.scan(step, state, ks.astype(jnp.int32))
     return state, ok
+
+
+# --------------------------------------------------------------------- #
+# plan/commit engine (the hot path)                                       #
+# --------------------------------------------------------------------- #
+class CommitStats(NamedTuple):
+    """What the batch engine actually pays at the destination.
+
+    ``state.flushes``/``state.fences`` keep the oracle's per-op
+    accounting; these fields report the coalesced batch cost: one
+    commit *round* handles at most one op per bucket, all rounds'
+    node-flushes share a fence and all head-flushes share a second, so
+    a batch needs ``2 × max same-bucket group size`` fences regardless
+    of batch width.
+    """
+    ops_committed: jax.Array      # int32  ops that mutated state
+    conflict_groups: jax.Array    # int32  buckets with ≥1 committing op
+    max_group: jax.Array          # int32  largest same-bucket group
+    coalesced_flushes: jax.Array  # int32  flushes the batch engine issues
+    coalesced_fences: jax.Array   # int32  fences  ″  (2 × max_group)
+
+
+def _plan(state: HashMapState, ks: jax.Array, n_buckets: int):
+    """The journey, batch-wide: locate every op's destination against the
+    pre-batch snapshot with a vmap'd chain walk.  No persistence state is
+    read or written.  Returns (node, snap_live, bucket, first) where
+    ``first`` marks the first occurrence of each key in batch order —
+    the only op of a duplicate-key group that can commit."""
+    node = jax.vmap(lambda k: _find(state, k, n_buckets)[0])(ks)
+    snap_live = (node != NULL) & state.live[node]
+    bucket = bucket_of(ks, n_buckets)
+    n = ks.shape[0]
+    order = jnp.argsort(ks)                     # stable: ties keep batch order
+    sk = ks[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]])
+    first = jnp.zeros(n, jnp.bool_).at[order].set(first_sorted)
+    return node, snap_live, bucket, first
+
+
+def _commit_stats(bucket: jax.Array, ok: jax.Array, flushes_per_op,
+                  n_buckets: int) -> CommitStats:
+    counts = jnp.zeros(n_buckets, jnp.int32).at[bucket].add(
+        ok.astype(jnp.int32))
+    max_group = counts.max()
+    return CommitStats(
+        ops_committed=ok.sum().astype(jnp.int32),
+        conflict_groups=(counts > 0).sum().astype(jnp.int32),
+        max_group=max_group,
+        coalesced_flushes=jnp.sum(
+            jnp.where(ok, flushes_per_op, 0)).astype(jnp.int32),
+        coalesced_fences=(2 * max_group).astype(jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames="n_buckets")
+def insert_parallel(state: HashMapState, ks: jax.Array, vs: jax.Array,
+                    n_buckets: int):
+    """Batch insert via plan/commit.  Bit-identical to :func:`insert`
+    (state, per-op results, flush/fence accounting); returns
+    ``(state', ok bool[batch], CommitStats)``.
+
+    One deliberate divergence: on node-pool exhaustion the scan oracle
+    silently drops node writes while still publishing the (dangling) id
+    into the bucket head; here a fresh insert that would not fit simply
+    *fails* (``ok=False``, no state change) — full-map overflow is
+    detectable by the caller instead of corrupting chains."""
+    ks = ks.astype(jnp.int32)
+    vs = vs.astype(jnp.int32)
+    n = ks.shape[0]
+    cap = state.key.shape[0]
+
+    # ---- plan: the journey, fully parallel, zero persistence ---------- #
+    node, snap_live, bucket, first = _plan(state, ks, n_buckets)
+    ok = first & ~snap_live
+    snap_dead = (node != NULL) & ~snap_live
+    fresh = ok & ~snap_dead
+
+    # ---- commit: allocation in batch order (oracle-identical ids) ----- #
+    # an op that would allocate past the pool fails; failed ops consume
+    # no id, so the surviving ids are exactly cursor, cursor+1, …
+    fresh_rank = jnp.cumsum(fresh.astype(jnp.int32)) - fresh
+    fresh = fresh & (state.cursor + fresh_rank < cap)
+    ok = fresh | (ok & snap_dead)
+    resurrect = ok & snap_dead
+    fresh_i32 = fresh.astype(jnp.int32)
+    nid = jnp.where(fresh, state.cursor + fresh_rank, node)
+
+    # node-field publication (masked ops scatter out of bounds → dropped)
+    widx = jnp.where(ok, nid, cap)
+    key = state.key.at[widx].set(ks, mode="drop")
+    val = state.val.at[widx].set(vs, mode="drop")
+    live = state.live.at[widx].set(True, mode="drop")
+
+    # chain linking: sort fresh ops by (bucket, batch index); inside a
+    # bucket group each fresh node points at its predecessor in the
+    # group, the group's first at the snapshot head, and the group's
+    # last becomes the new head — newest-first, exactly the scan order.
+    bkey = jnp.where(fresh, bucket, n_buckets)      # non-fresh sort last
+    order = jnp.argsort(bkey)                       # stable within groups
+    sb = bkey[order]
+    snid = nid[order]
+    sfresh = fresh[order]
+    same_prev = jnp.concatenate(
+        [jnp.zeros((1,), jnp.bool_), sb[1:] == sb[:-1]])
+    link = jnp.where(same_prev,
+                     jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                      snid[:-1]]),
+                     state.head[jnp.clip(sb, 0, n_buckets - 1)])
+    nxt = state.nxt.at[jnp.where(sfresh, snid, cap)].set(link, mode="drop")
+    group_last = sfresh & jnp.concatenate(
+        [sb[:-1] != sb[1:], jnp.ones((1,), jnp.bool_)])
+    head = state.head.at[jnp.where(group_last, sb, n_buckets)].set(
+        snid, mode="drop")
+
+    # oracle accounting: fresh = 2 flushes, resurrect = 1, +2 fences each
+    flushes_per_op = jnp.where(fresh, 2, jnp.where(resurrect, 1, 0))
+    state = state._replace(
+        key=key, val=val, nxt=nxt, live=live, head=head,
+        cursor=state.cursor + fresh_i32.sum(),
+        flushes=state.flushes + flushes_per_op.sum(),
+        fences=state.fences + 2 * ok.sum(),
+    )
+    return state, ok, _commit_stats(bucket, ok, flushes_per_op, n_buckets)
+
+
+@partial(jax.jit, static_argnames="n_buckets")
+def delete_parallel(state: HashMapState, ks: jax.Array, n_buckets: int):
+    """Batch logical delete via plan/commit; oracle-identical to
+    :func:`delete`.  Returns ``(state', ok bool[batch], CommitStats)``."""
+    ks = ks.astype(jnp.int32)
+    cap = state.key.shape[0]
+    node, snap_live, bucket, first = _plan(state, ks, n_buckets)
+    ok = first & snap_live
+    live = state.live.at[jnp.where(ok, node, cap)].set(False, mode="drop")
+    flushes_per_op = jnp.where(ok, 1, 0)
+    state = state._replace(
+        live=live,
+        flushes=state.flushes + flushes_per_op.sum(),
+        fences=state.fences + 2 * ok.sum(),
+    )
+    return state, ok, _commit_stats(bucket, ok, flushes_per_op, n_buckets)
 
 
 @partial(jax.jit, static_argnames="n_buckets")

@@ -1,0 +1,9 @@
+"""Version-compat shims shared by the Pallas kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if COMPILER_PARAMS is None:  # fail at import, not at kernel call
+    raise ImportError("jax.experimental.pallas.tpu has neither "
+                      "CompilerParams nor TPUCompilerParams")

@@ -16,10 +16,18 @@ Inputs:
 Outputs:
   found [Q] int32 (0/1), vals [Q] int32
 
-Grid: (Q/block_q,).  The whole bucket table is pinned in VMEM (the sizes
-the paper benchmarks fit comfortably: 4096 buckets × 128 slots × 4 B =
-2 MB); each program loads its query block, hashes in-kernel, and walks the
-tile row with dynamic-slice loads.
+Grid: ``(Q/block_q, n_buckets/block_nb)`` — the second dimension
+*streams* bucket-tile blocks through VMEM, so the table no longer has to
+fit on chip (the old kernel pinned the whole table, capping it at ~2 MB).
+The bucket axis is the innermost (sequential) grid dimension and the
+output block index depends only on the query-block index, so the output
+stays resident in VMEM across the sweep and accumulates.
+
+Per (query-block, bucket-tile) step the whole query block is processed at
+once — hash all queries, mask those whose bucket falls outside this tile,
+gather their bucket rows with one vectorized take, and compare — no
+scalar per-query loop.  Each query's bucket lives in exactly one tile, so
+sum-accumulation across tiles is exact (bit-identical to ``probe_ref``).
 """
 from __future__ import annotations
 
@@ -38,40 +46,51 @@ def _mix32(x):
 
 
 def _kernel(keys_ref, vals_ref, q_ref, found_ref, val_ref, *,
-            n_buckets: int, block_q: int):
+            n_buckets: int, block_nb: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        found_ref[...] = jnp.zeros_like(found_ref)
+        val_ref[...] = jnp.zeros_like(val_ref)
+
     qs = q_ref[...]                                    # [block_q]
-
-    def body(i, _):
-        q = qs[i]
-        b = (_mix32(q) % jnp.uint32(n_buckets)).astype(jnp.int32)
-        row_k = pl.load(keys_ref, (pl.dslice(b, 1), slice(None)))  # [1,cap]
-        row_v = pl.load(vals_ref, (pl.dslice(b, 1), slice(None)))
-        hit = row_k == q                               # vectorized compare
-        found_ref[i] = hit.any().astype(jnp.int32)
-        val_ref[i] = jnp.where(hit, row_v, 0).sum().astype(jnp.int32)
-        return 0
-
-    jax.lax.fori_loop(0, block_q, body, 0)
+    b = (_mix32(qs) % jnp.uint32(n_buckets)).astype(jnp.int32)
+    local = b - j * block_nb
+    in_tile = (local >= 0) & (local < block_nb)        # bucket in this tile?
+    safe = jnp.where(in_tile, local, 0)
+    rows_k = jnp.take(keys_ref[...], safe, axis=0)     # [block_q, cap] gather
+    rows_v = jnp.take(vals_ref[...], safe, axis=0)
+    hit = (rows_k == qs[:, None]) & in_tile[:, None]   # vectorized compare
+    found_ref[...] += hit.any(axis=1).astype(jnp.int32)
+    val_ref[...] += jnp.where(hit, rows_v, 0).sum(axis=1).astype(jnp.int32)
 
 
 def nvt_probe_kernel(keys_tile, vals_tile, queries, *, block_q: int = 128,
-                     interpret: bool = False):
+                     block_nb: int = 512, interpret: bool = False):
     NB, cap = keys_tile.shape
     Q = queries.shape[0]
     block_q = min(block_q, Q)
     assert Q % block_q == 0
-    kernel = functools.partial(_kernel, n_buckets=NB, block_q=block_q)
+    block_nb = min(block_nb, NB)
+    pad_nb = (-NB) % block_nb
+    if pad_nb:
+        # padded rows are empty buckets no query hashes to (b < NB always)
+        keys_tile = jnp.pad(keys_tile, ((0, pad_nb), (0, 0)))
+        vals_tile = jnp.pad(vals_tile, ((0, pad_nb), (0, 0)))
+    n_tiles = (NB + pad_nb) // block_nb
+    kernel = functools.partial(_kernel, n_buckets=NB, block_nb=block_nb)
     return pl.pallas_call(
         kernel,
-        grid=(Q // block_q,),
+        grid=(Q // block_q, n_tiles),
         in_specs=[
-            pl.BlockSpec((NB, cap), lambda i: (0, 0)),   # whole table, VMEM
-            pl.BlockSpec((NB, cap), lambda i: (0, 0)),
-            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_nb, cap), lambda i, j: (j, 0)),  # streamed
+            pl.BlockSpec((block_nb, cap), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
         ],
         out_specs=[
-            pl.BlockSpec((block_q,), lambda i: (i,)),
-            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),  # VMEM-resident
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),  # across the sweep
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Q,), jnp.int32),

@@ -10,10 +10,16 @@ from .kernel import nvt_probe_kernel
 from .ref import probe_ref
 
 
-@partial(jax.jit, static_argnames=("impl", "interpret", "block_q"))
+@partial(jax.jit, static_argnames=("impl", "interpret", "block_q",
+                                   "block_nb"))
 def nvt_probe(keys_tile, vals_tile, queries, *, impl: str = "pallas",
-              interpret: bool = False, block_q: int = 128):
-    """Batched read-only probe (the journey).  Returns (found, vals)."""
+              interpret: bool = False, block_q: int = 128,
+              block_nb: int = 512):
+    """Batched read-only probe (the journey).  Returns (found, vals).
+
+    ``block_nb`` sets the bucket-tile block streamed through VMEM per
+    grid step — tables larger than VMEM stream in ``NB/block_nb``
+    tiles (see kernel.py)."""
     Q = queries.shape[0]
     pad = (-Q) % block_q
     q = jnp.pad(queries.astype(jnp.int32), (0, pad),
@@ -22,6 +28,6 @@ def nvt_probe(keys_tile, vals_tile, queries, *, impl: str = "pallas",
         found, vals = probe_ref(keys_tile, vals_tile, q)
     else:
         found, vals = nvt_probe_kernel(keys_tile, vals_tile, q,
-                                       block_q=block_q,
+                                       block_q=block_q, block_nb=block_nb,
                                        interpret=interpret)
     return found[:Q], vals[:Q]

@@ -32,6 +32,23 @@ def probe_ref(keys_tile, vals_tile, queries):
     return found, vals
 
 
+def tiles_from_keys(keys, n_buckets: int, cap: int, val_mult: int = 3):
+    """Build dense bucket tiles directly from a key array (first-fit per
+    bucket, overflowing keys dropped); vals are ``key * val_mult``.
+    Shared by the kernel tests and benchmarks."""
+    keys = np.asarray(keys, np.int32)
+    b = (mix32_np(keys) % np.uint32(n_buckets)).astype(np.int64)
+    kt = np.zeros((n_buckets, cap), np.int32)
+    vt = np.zeros((n_buckets, cap), np.int32)
+    slots = np.zeros(n_buckets, np.int64)
+    for k, bb in zip(keys, b):
+        if slots[bb] < cap:
+            kt[bb, slots[bb]] = k
+            vt[bb, slots[bb]] = k * val_mult
+            slots[bb] += 1
+    return jnp.asarray(kt), jnp.asarray(vt)
+
+
 def tiles_from_hashmap(state, n_buckets: int, cap: int):
     """Convert a core.batched.HashMapState chain map into bucket tiles
     (the TPU-native dense layout) — used to cross-check the kernel against

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, state_sc, *,
             chunk: int):
@@ -87,7 +89,7 @@ def ssd_scan_kernel(xh, dt, dA, Bm, Cm, *, interpret: bool = False):
         out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, C, Q, P), xh.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xh, dt, dA, Bm, Cm)

@@ -34,6 +34,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from .index import live_step_index
 from .manifest import (Manifest, StagedIO, digest, list_step_dirs,
                        manifest_rel)
 
@@ -130,15 +131,16 @@ class CheckpointManager:
                 valid[step] = man
         head = valid[max(valid)] if valid else None
         # trim marked nodes: uncommitted or invalid step dirs not
-        # referenced by the surviving chain
+        # referenced by the surviving chain.  Liveness is a membership
+        # probe on the durable-map manifest index (persistence/index.py).
         keep_files = set()
         for man in valid.values():
             keep_files.update(info["file"] for info in man.files.values())
-        for step in list_step_dirs(self.io.root):
-            if step not in valid:
-                sdir = f"step_{step:08d}"
-                if not any(f.startswith(sdir) for f in keep_files):
-                    self.io.remove_tree(sdir)
+        idx = live_step_index(valid.values(), keep_files)
+        steps = list(list_step_dirs(self.io.root))
+        for step, alive in zip(steps, idx.contains(steps)):
+            if not alive:
+                self.io.remove_tree(f"step_{step:08d}")
         self._last_manifest = head
         return head
 
@@ -180,10 +182,13 @@ class CheckpointManager:
                        if self.io.exists(manifest_rel(s)))
         survivors = steps[-keep:]
         keep_files = set()
+        manifests = []
         for s in survivors:
             m = Manifest.from_bytes(self.io.read(manifest_rel(s)))
+            manifests.append(m)
             keep_files.update(i["file"] for i in m.files.values())
-        for s in steps[:-keep]:
-            sdir = f"step_{s:08d}"
-            if not any(f.startswith(sdir) for f in keep_files):
-                self.io.remove_tree(sdir)
+        idx = live_step_index(manifests, keep_files)
+        victims = steps[:-keep]
+        for s, alive in zip(victims, idx.contains(victims)):
+            if not alive:
+                self.io.remove_tree(f"step_{s:08d}")

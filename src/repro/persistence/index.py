@@ -1,0 +1,110 @@
+"""Checkpoint-manifest index on the JAX-native durable map.
+
+Recovery and GC both answer the same set-membership question over step
+directories — "is this step committed, or does a surviving manifest
+reference a file it owns?"  At a few checkpoints the Python-set answer is
+free; at production retention depths (thousands of delta-chained steps ×
+dozens of shards) it is a hash-map workload, so it runs on the same
+plan/commit engine (:mod:`repro.core.batched`) the serving path uses:
+one ``insert_parallel`` batch to build the index (the commit), one
+``vmap``'d :func:`repro.core.batched.lookup` batch to classify every
+step dir (the journey — zero persistence work).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import batched
+
+N_BUCKETS = 128
+
+
+def owner_step(rel: str) -> int:
+    """Owner step of a manifest-referenced file path (``step_XXXXXXXX/…``)."""
+    return int(rel.split("/", 1)[0].split("_")[1])
+
+
+class MembershipIndex:
+    """Growable set-membership index on the durable map.
+
+    Keys are non-negative ints, stored as ``key + 1`` (node id 0 is the
+    durable map's reserved null, so key 0 is avoided).  The node pool
+    doubles when a batch would not fit — ``insert_parallel`` fails
+    cleanly on exhaustion rather than corrupting chains, but an index
+    must never drop members, so growth happens *before* the commit."""
+
+    def __init__(self, capacity: int = 4096, n_buckets: int = N_BUCKETS):
+        self.n_buckets = n_buckets
+        self.capacity = capacity
+        self.state = batched.make_state(capacity, n_buckets)
+        self._keys = np.zeros(0, np.int32)       # members, for rebuilds
+        self.last_stats = None
+
+    @staticmethod
+    def _as_i32(keys) -> np.ndarray:
+        """The durable map is int32-keyed; reject keys that would silently
+        wrap (the dict probe this index replaces took arbitrary ints)."""
+        ks = np.asarray(list(keys), np.int64)
+        if ks.size and (ks.min() < 0 or ks.max() >= 2**31 - 1):
+            raise ValueError("MembershipIndex keys must be in "
+                             f"[0, 2**31-2], got range [{ks.min()}, "
+                             f"{ks.max()}]")
+        return ks.astype(np.int32)
+
+    @staticmethod
+    def _pad_pow2(ks: np.ndarray) -> np.ndarray:
+        """Pad a key batch to the next power of two with a duplicate of
+        its first key, capping jit retraces at one per (log2 size,
+        capacity) instead of one per distinct batch length.  Duplicates
+        never commit, so padding is invisible to the map."""
+        n = max(1, 1 << (ks.size - 1).bit_length())
+        return np.concatenate([ks, np.full(n - ks.size, ks[0], np.int32)])
+
+    def add(self, keys: Iterable[int]) -> None:
+        ks = self._as_i32(sorted(set(int(k) for k in keys)))
+        if ks.size:
+            ks = ks[~np.isin(ks, self._keys)]   # already-members: no-op
+        if ks.size == 0:
+            return
+        # cursor starts at 1; worst case every key in the batch is fresh
+        needed = 1 + self._keys.size + ks.size
+        if needed > self.capacity:
+            while needed > self.capacity:
+                self.capacity *= 2
+            self.state = batched.make_state(self.capacity, self.n_buckets)
+            if self._keys.size:
+                old = jnp.asarray(self._pad_pow2(self._keys) + 1)
+                self.state, _, _ = batched.insert_parallel(
+                    self.state, old, old, self.n_buckets)
+        n = ks.size
+        padded = self._pad_pow2(ks)
+        self.state, ok, self.last_stats = batched.insert_parallel(
+            self.state, jnp.asarray(padded + 1), jnp.asarray(padded + 1),
+            self.n_buckets)
+        self._keys = np.concatenate([self._keys,
+                                     ks[np.asarray(ok)[:n]]])
+
+    def contains(self, keys: Sequence[int]) -> np.ndarray:
+        if len(keys) == 0:
+            return np.zeros(0, np.bool_)
+        ks = self._as_i32(keys)
+        found, _ = batched.lookup(
+            self.state, jnp.asarray(self._pad_pow2(ks) + 1), self.n_buckets)
+        return np.asarray(found)[:ks.size]
+
+
+def live_step_index(manifests, keep_files: Iterable[str]) -> MembershipIndex:
+    """Index of every step that must survive a trim pass: steps with a
+    valid/surviving manifest plus owner steps of all delta-referenced
+    files (an old step stays alive while any survivor references it)."""
+    idx = MembershipIndex()
+    steps = set()
+    for man in manifests:
+        steps.add(man.step)
+    for rel in keep_files:
+        steps.add(owner_step(rel))
+    idx.add(steps)
+    return idx

@@ -15,19 +15,71 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..persistence.index import MembershipIndex
 from ..persistence.manifest import StagedIO
 
 
 class RequestLog:
-    def __init__(self, root, seed: int = 0):
+    """Durable request log + a JAX-native dedup index.
+
+    The committed-rid set is mirrored into a durable-map
+    :class:`~repro.persistence.index.MembershipIndex` (rebuilt from the
+    log on restart, extended by one plan/commit batch per commit), so
+    the exactly-once check in :meth:`ServeEngine.serve` is a batched,
+    persistence-free lookup — the journey — instead of a Python dict
+    probe per request."""
+
+    def __init__(self, root, seed: int = 0, capacity: int = 1 << 15):
         self.io = StagedIO(Path(root), seed=seed)
-        self._n = len(self.committed())
+        self._dedup = MembershipIndex(capacity, n_buckets=256)
+        self._oob: set = set()     # rids outside the map's int32 key space
+        self._folded: set = set()  # log filenames already in the index
+        self._n = 0
+        self.refresh()
+
+    def _index_rids(self, rids) -> None:
+        in_range = [r for r in map(int, rids) if 0 <= r < 2**31 - 1]
+        self._oob.update(r for r in map(int, rids)
+                         if not 0 <= r < 2**31 - 1)
+        self._dedup.add(in_range)
+
+    def refresh(self) -> None:
+        """Fold commits made by other RequestLog instances on the same log
+        dir into the dedup index.  Incremental: only log records not yet
+        folded are parsed, so a refresh with nothing new is free."""
+        for p in sorted(Path(self.io.root).glob("log_*.json")):
+            if p.name in self._folded:
+                continue
+            try:
+                rids = [int(k) for k in json.loads(p.read_text())]
+            except json.JSONDecodeError:
+                continue    # torn log record: trimmed by recovery semantics
+            self._folded.add(p.name)
+            self._index_rids(rids)
+        self._n = max(self._n, len(self._folded))
+
+    def is_committed(self, rids: Sequence[int]) -> np.ndarray:
+        """Batched exactly-once probe over the dedup map (bool[len(rids)]).
+        Rids representable as int32 go through the durable map; the rare
+        out-of-range rid falls back to a Python-set probe (the old
+        dict-based dedup accepted arbitrary ints)."""
+        rids = [int(r) for r in rids]
+        out = np.zeros(len(rids), np.bool_)
+        in_range = [(i, r) for i, r in enumerate(rids)
+                    if 0 <= r < 2**31 - 1]
+        if in_range:
+            idx, ks = zip(*in_range)
+            out[list(idx)] = self._dedup.contains(list(ks))
+        for i, r in enumerate(rids):
+            if not 0 <= r < 2**31 - 1:
+                out[i] = r in self._oob
+        return out
 
     def commit(self, results: Dict[int, list]) -> None:
         """Commit a batch of finished requests (one fence for the batch —
@@ -36,7 +88,9 @@ class RequestLog:
         self.io.write(rel, json.dumps(results).encode())
         self.io.flush(rel)
         self.io.fence()
+        self._folded.add(rel)
         self._n += 1
+        self._index_rids(results)
 
     def committed(self) -> Dict[int, list]:
         out = {}
@@ -86,8 +140,10 @@ class ServeEngine:
               *, crash_after_batches: Optional[int] = None) -> Dict[int, list]:
         """Serve a request dict {rid: prompt tokens[S]}; returns committed
         results.  Already-committed rids are skipped (exactly-once)."""
-        done = self.log.committed()
-        todo = [rid for rid in sorted(requests) if rid not in done]
+        self.log.refresh()    # pick up commits from other engine instances
+        rids = sorted(requests)
+        todo = [rid for rid, done in zip(rids, self.log.is_committed(rids))
+                if not done]
         batches = 0
         for i in range(0, len(todo), self.batch):
             rids = todo[i:i + self.batch]

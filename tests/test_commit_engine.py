@@ -1,0 +1,162 @@
+"""Plan/commit engine vs the sequential-scan oracle.
+
+The parallel engine must be *bit-identical* to the scan path: same state
+arrays (including node-id allocation order), same per-op results, same
+flush/fence accounting — under duplicate keys, same-bucket conflicts,
+resurrection, and interleaved insert/delete batches.  CommitStats
+additionally reports the coalesced batch cost, which must follow the
+2 × max-same-bucket-group law.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched as B
+
+NB = 16   # few buckets → heavy same-bucket conflict groups
+
+
+def assert_states_equal(a: B.HashMapState, b: B.HashMapState, ctx=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f} diverged from oracle")
+
+
+def test_insert_parallel_matches_oracle_duplicates_and_conflicts():
+    rng = np.random.default_rng(1)
+    for trial in range(5):
+        st_o = B.make_state(2048, NB)
+        st_p = B.make_state(2048, NB)
+        for rnd in range(5):
+            # keys drawn from a tiny range: duplicate keys inside the
+            # batch plus guaranteed same-bucket collisions across keys
+            ks = jnp.asarray(rng.integers(0, 40, size=48))
+            vs = jnp.asarray(rng.integers(0, 1000, size=48))
+            st_o, ok_o = B.insert(st_o, ks, vs, NB)
+            st_p, ok_p, stats = B.insert_parallel(st_p, ks, vs, NB)
+            np.testing.assert_array_equal(np.asarray(ok_o),
+                                          np.asarray(ok_p))
+            assert_states_equal(st_o, st_p, f"trial {trial} round {rnd}")
+            assert int(stats.coalesced_fences) == 2 * int(stats.max_group)
+
+
+def test_interleaved_insert_delete_resurrect_matches_oracle():
+    rng = np.random.default_rng(7)
+    st_o = B.make_state(4096, NB)
+    st_p = B.make_state(4096, NB)
+    for rnd in range(12):
+        ks = jnp.asarray(rng.integers(0, 60, size=32))
+        if rng.random() < 0.5:
+            vs = jnp.asarray(rng.integers(0, 1000, size=32))
+            st_o, ok_o = B.insert(st_o, ks, vs, NB)
+            st_p, ok_p, _ = B.insert_parallel(st_p, ks, vs, NB)
+        else:
+            st_o, ok_o = B.delete(st_o, ks, NB)
+            st_p, ok_p, _ = B.delete_parallel(st_p, ks, NB)
+        np.testing.assert_array_equal(np.asarray(ok_o), np.asarray(ok_p))
+        assert_states_equal(st_o, st_p, f"round {rnd}")
+    # fence/flush accounting tracked the oracle the whole way
+    assert int(st_o.fences) == int(st_p.fences)
+    assert int(st_o.flushes) == int(st_p.flushes)
+
+
+def test_accounting_identical_and_coalesced_law():
+    """Per-op accounting is oracle-identical; the coalesced batch cost is
+    2 fences per commit *round* (one op per bucket per round)."""
+    st = B.make_state(2048, NB)
+    ks = jnp.arange(1, 101)
+    st_o, _ = B.insert(st, ks, ks, NB)
+    st_p, ok, stats = B.insert_parallel(st, ks, ks, NB)
+    assert int(st_p.flushes) == int(st_o.flushes) == 200
+    assert int(st_p.fences) == int(st_o.fences) == 200
+    counts = np.zeros(NB, np.int64)
+    for k in np.asarray(ks):
+        counts[int(B.bucket_of(jnp.int32(k), NB))] += 1
+    assert int(stats.max_group) == counts.max()
+    assert int(stats.coalesced_fences) == 2 * counts.max()
+    assert int(stats.coalesced_flushes) == int(st_p.flushes) - int(st.flushes)
+    assert int(stats.ops_committed) == 100
+    assert int(stats.conflict_groups) == (counts > 0).sum()
+
+
+def test_lookup_after_parallel_commit():
+    st = B.make_state(1024, NB)
+    ks = jnp.arange(100, 200)
+    st, ok, _ = B.insert_parallel(st, ks, ks * 3, NB)
+    assert bool(ok.all())
+    found, vals = B.lookup(st, ks, NB)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ks) * 3)
+    st, okd, _ = B.delete_parallel(st, jnp.array([100, 100, 999]), NB)
+    assert list(np.asarray(okd)) == [True, False, False]
+    found, _ = B.lookup(st, jnp.array([100]), NB)
+    assert not bool(found[0])
+
+
+def test_crash_replay_prefix_durability_parallel():
+    """Linearization order is batch order for both engines, so a crash
+    after op p durably commits exactly the batch prefix [:p]; replaying
+    that prefix through either engine reproduces the recovered state."""
+    rng = np.random.default_rng(0)
+    ks = jnp.asarray(rng.permutation(np.arange(1, 65)))
+    vs = ks * 7
+    full, _, _ = B.insert_parallel(B.make_state(512, NB), ks, vs, NB)
+    for p in (0, 1, 17, 63, 64):
+        replay_scan, _ = B.insert(B.make_state(512, NB), ks[:p], vs[:p], NB)
+        replay_par, _, _ = B.insert_parallel(
+            B.make_state(512, NB), ks[:p], vs[:p], NB)
+        assert_states_equal(replay_scan, replay_par, f"prefix {p}")
+        found, _ = B.lookup(replay_par, ks, NB)
+        assert int(found.sum()) == p
+        assert bool(found[:p].all()) if p else True
+
+
+def test_insert_parallel_fails_cleanly_on_pool_exhaustion():
+    """Fresh inserts past the node pool fail (ok=False) without touching
+    state — no dangling head pointers, resurrects still work at full."""
+    st = B.make_state(4, 2)                  # ids 1..3 usable
+    st, ok, _ = B.insert_parallel(st, jnp.arange(1, 7), jnp.arange(1, 7), 2)
+    assert list(np.asarray(ok)) == [True] * 3 + [False] * 3
+    assert int(st.cursor) == 4
+    found, vals = B.lookup(st, jnp.arange(1, 7), 2)
+    assert list(np.asarray(found)) == [True] * 3 + [False] * 3
+    np.testing.assert_array_equal(np.asarray(vals)[:3], [1, 2, 3])
+    st, okd, _ = B.delete_parallel(st, jnp.array([2]), 2)
+    assert bool(okd[0])
+    st, okr, _ = B.insert_parallel(st, jnp.array([2, 9]),
+                                   jnp.array([42, 1]), 2)
+    assert list(np.asarray(okr)) == [True, False]   # resurrect fits, fresh not
+    _, v = B.lookup(st, jnp.array([2]), 2)
+    assert int(v[0]) == 42
+
+
+def test_membership_index_grows_past_initial_capacity():
+    """The durable-map membership index (serving dedup / manifest index)
+    must never drop members: the pool doubles before a batch that would
+    not fit."""
+    from repro.persistence.index import MembershipIndex
+    idx = MembershipIndex(capacity=8)
+    keys = list(range(100, 180))             # 80 members through an 8-pool
+    for i in range(0, len(keys), 16):
+        idx.add(keys[i:i + 16])
+    assert idx.capacity >= 81
+    assert bool(idx.contains(keys).all())
+    assert not bool(idx.contains([5, 999]).any())
+
+
+def test_plan_phase_does_no_persistence_work():
+    """The journey: planning a batch reads no fence/flush state and the
+    failed ops of a commit add nothing to the accounting."""
+    st = B.make_state(512, NB)
+    st, _, _ = B.insert_parallel(st, jnp.arange(1, 21), jnp.arange(1, 21),
+                                 NB)
+    f0, n0 = int(st.flushes), int(st.fences)
+    # all-duplicate batch: every op fails, accounting must not move
+    st2, ok, stats = B.insert_parallel(st, jnp.arange(1, 21),
+                                       jnp.zeros(20, jnp.int32), NB)
+    assert not bool(ok.any())
+    assert int(st2.flushes) == f0 and int(st2.fences) == n0
+    assert int(stats.coalesced_fences) == 0
+    B.lookup(st2, jnp.arange(1, 41), NB)
+    assert int(st2.flushes) == f0 and int(st2.fences) == n0

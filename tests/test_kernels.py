@@ -143,6 +143,28 @@ def test_nvt_probe_sweep(NB, cap, nq):
             assert int(vals[i]) == inserted[int(qk)]
 
 
+def test_nvt_probe_streams_table_larger_than_vmem_cap():
+    """The second grid dimension streams bucket-tile blocks through VMEM:
+    a 4 MB table (> the old 2 MB whole-table-in-VMEM cap) in 8 tiles,
+    bit-exact against probe_ref, including a non-divisible tile count
+    (padded bucket rows)."""
+    from repro.kernels.nvt_probe.ref import tiles_from_keys
+    NB, cap = 4096, 256                      # 4096*256*4 B = 4 MB
+    assert NB * cap * 4 > 2 * 1024 * 1024
+    rng = np.random.default_rng(0)
+    keys = rng.choice(np.arange(1, 1 << 20), size=NB * cap // 4,
+                      replace=False).astype(np.int32)
+    kt, vt = tiles_from_keys(keys, NB, cap, val_mult=5)
+    queries = jnp.asarray(
+        rng.integers(1, 1 << 20, size=128).astype(np.int32))
+    rf, rv = nvt_probe(kt, vt, queries, impl="xla")
+    for block_nb in (512, 4096, 3000):       # streamed / single / padded
+        f, v = nvt_probe(kt, vt, queries, impl="pallas", interpret=True,
+                         block_q=64, block_nb=block_nb)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(rf))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
 def test_nvt_probe_cross_checks_chain_hashmap():
     """Kernel on dense tiles == chain walking on the jitted durable map —
     the journey gives identical answers in both layouts."""

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's invariants (deliverable c)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

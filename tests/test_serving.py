@@ -53,6 +53,23 @@ def test_serve_crash_recovery_exactly_once(setup, tmp_path):
         assert full[rid] == gen                   # survived unmodified
 
 
+def test_request_log_dedup_oob_rids_and_cross_instance(tmp_path):
+    """The durable-map dedup must keep the old dict probe's behavior:
+    arbitrary-int rids (outside int32) are accepted, restart against a
+    log containing them works, and commits from another RequestLog
+    instance on the same dir are visible after refresh()."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({7: [1], 2**33: [2], -5: [3]})
+    assert list(log.is_committed([7, 2**33, -5, 8])) == [True] * 3 + [False]
+    log2 = RequestLog(tmp_path)          # restart over the oob-rid log
+    assert list(log2.is_committed([7, 2**33, -5, 8])) == [True] * 3 + [False]
+    a, b = RequestLog(tmp_path), RequestLog(tmp_path)
+    b.commit({42: [9]})
+    a.refresh()                          # serve() calls this each time
+    assert bool(a.is_committed([42])[0])
+
+
 def test_serve_results_match_teacher_forcing(setup, tmp_path):
     """The engine's prefill+decode greedy path agrees with running the
     model once over the full (prompt + generated) sequence."""

@@ -131,18 +131,23 @@ class CheckpointManager:
                 valid[step] = man
         head = valid[max(valid)] if valid else None
         # trim marked nodes: uncommitted or invalid step dirs not
-        # referenced by the surviving chain.  Liveness is a membership
-        # probe on the durable-map manifest index (persistence/index.py).
-        keep_files = set()
-        for man in valid.values():
-            keep_files.update(info["file"] for info in man.files.values())
-        idx = live_step_index(valid.values(), keep_files)
-        steps = list(list_step_dirs(self.io.root))
-        for step, alive in zip(steps, idx.contains(steps)):
-            if not alive:
-                self.io.remove_tree(f"step_{step:08d}")
+        # referenced by the surviving chain.
+        self._trim_dead(list(valid.values()),
+                        list(list_step_dirs(self.io.root)))
         self._last_manifest = head
         return head
+
+    def _trim_dead(self, manifests, candidates) -> None:
+        """Remove every candidate step dir that no surviving manifest
+        commits or delta-references.  Liveness is a membership probe on
+        the durable-map manifest index (persistence/index.py)."""
+        keep_files = set()
+        for man in manifests:
+            keep_files.update(info["file"] for info in man.files.values())
+        idx = live_step_index(manifests, keep_files)
+        for step, alive in zip(candidates, idx.contains(candidates)):
+            if not alive:
+                self.io.remove_tree(f"step_{step:08d}")
 
     # ------------------------------------------------------------------ #
     def restore(self, tree_like, *, shardings=None):
@@ -180,15 +185,6 @@ class CheckpointManager:
             return
         steps = sorted(s for s in list_step_dirs(self.io.root)
                        if self.io.exists(manifest_rel(s)))
-        survivors = steps[-keep:]
-        keep_files = set()
-        manifests = []
-        for s in survivors:
-            m = Manifest.from_bytes(self.io.read(manifest_rel(s)))
-            manifests.append(m)
-            keep_files.update(i["file"] for i in m.files.values())
-        idx = live_step_index(manifests, keep_files)
-        victims = steps[:-keep]
-        for s, alive in zip(victims, idx.contains(victims)):
-            if not alive:
-                self.io.remove_tree(f"step_{s:08d}")
+        manifests = [Manifest.from_bytes(self.io.read(manifest_rel(s)))
+                     for s in steps[-keep:]]
+        self._trim_dead(manifests, steps[:-keep])

@@ -30,8 +30,11 @@ def owner_step(rel: str) -> int:
 class MembershipIndex:
     """Growable set-membership index on the durable map.
 
-    Keys are non-negative ints, stored as ``key + 1`` (node id 0 is the
-    durable map's reserved null, so key 0 is avoided).  The node pool
+    Keys are arbitrary ints.  Keys in ``[0, 2**31-2]`` are stored in the
+    int32-keyed durable map as ``key + 1`` (node id 0 is the map's
+    reserved null, so key 0 is avoided); the rare out-of-range key falls
+    back to a Python-set side table rather than silently wrapping (the
+    dict probe this index replaces took arbitrary ints).  The node pool
     doubles when a batch would not fit — ``insert_parallel`` fails
     cleanly on exhaustion rather than corrupting chains, but an index
     must never drop members, so growth happens *before* the commit."""
@@ -41,18 +44,13 @@ class MembershipIndex:
         self.capacity = capacity
         self.state = batched.make_state(capacity, n_buckets)
         self._keys = np.zeros(0, np.int32)       # members, for rebuilds
+        self._members: set = set()               # same, for O(1) add dedup
+        self._oob: set = set()     # members outside the int32 key space
         self.last_stats = None
 
     @staticmethod
-    def _as_i32(keys) -> np.ndarray:
-        """The durable map is int32-keyed; reject keys that would silently
-        wrap (the dict probe this index replaces took arbitrary ints)."""
-        ks = np.asarray(list(keys), np.int64)
-        if ks.size and (ks.min() < 0 or ks.max() >= 2**31 - 1):
-            raise ValueError("MembershipIndex keys must be in "
-                             f"[0, 2**31-2], got range [{ks.min()}, "
-                             f"{ks.max()}]")
-        return ks.astype(np.int32)
+    def _in_range(k: int) -> bool:
+        return 0 <= k < 2**31 - 1
 
     @staticmethod
     def _pad_pow2(ks: np.ndarray) -> np.ndarray:
@@ -64,9 +62,12 @@ class MembershipIndex:
         return np.concatenate([ks, np.full(n - ks.size, ks[0], np.int32)])
 
     def add(self, keys: Iterable[int]) -> None:
-        ks = self._as_i32(sorted(set(int(k) for k in keys)))
-        if ks.size:
-            ks = ks[~np.isin(ks, self._keys)]   # already-members: no-op
+        keys = {int(k) for k in keys}
+        self._oob.update(k for k in keys if not self._in_range(k))
+        # already-members are a no-op; the set probe keeps the dedup
+        # O(batch) instead of np.isin's O(members) re-scan per add
+        ks = np.asarray(sorted(k for k in keys if self._in_range(k)
+                               and k not in self._members), np.int32)
         if ks.size == 0:
             return
         # cursor starts at 1; worst case every key in the batch is fresh
@@ -84,16 +85,26 @@ class MembershipIndex:
         self.state, ok, self.last_stats = batched.insert_parallel(
             self.state, jnp.asarray(padded + 1), jnp.asarray(padded + 1),
             self.n_buckets)
-        self._keys = np.concatenate([self._keys,
-                                     ks[np.asarray(ok)[:n]]])
+        committed = ks[np.asarray(ok)[:n]]
+        self._keys = np.concatenate([self._keys, committed])
+        self._members.update(int(k) for k in committed)
 
     def contains(self, keys: Sequence[int]) -> np.ndarray:
-        if len(keys) == 0:
-            return np.zeros(0, np.bool_)
-        ks = self._as_i32(keys)
-        found, _ = batched.lookup(
-            self.state, jnp.asarray(self._pad_pow2(ks) + 1), self.n_buckets)
-        return np.asarray(found)[:ks.size]
+        keys = [int(k) for k in keys]
+        out = np.zeros(len(keys), np.bool_)
+        in_range = [(i, k) for i, k in enumerate(keys)
+                    if self._in_range(k)]
+        if in_range:
+            pos, ks = zip(*in_range)
+            ks = np.asarray(ks, np.int32)
+            found, _ = batched.lookup(
+                self.state, jnp.asarray(self._pad_pow2(ks) + 1),
+                self.n_buckets)
+            out[list(pos)] = np.asarray(found)[:ks.size]
+        for i, k in enumerate(keys):
+            if not self._in_range(k):
+                out[i] = k in self._oob
+        return out
 
 
 def live_step_index(manifests, keep_files: Iterable[str]) -> MembershipIndex:

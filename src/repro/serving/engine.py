@@ -14,6 +14,7 @@ The serving loop is the paper's operation shape one level up:
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
@@ -38,69 +39,109 @@ class RequestLog:
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15):
         self.io = StagedIO(Path(root), seed=seed)
         self._dedup = MembershipIndex(capacity, n_buckets=256)
-        self._oob: set = set()     # rids outside the map's int32 key space
         self._folded: set = set()  # log filenames already in the index
-        self._n = 0
+        self._torn: dict = {}      # torn filename -> (size, mtime_ns) seen
+        self._results: Dict[int, list] = {}   # rid -> committed result
+        self._n = 0                # next log index: 1 + highest seen
         self.refresh()
+        # recovery: a restart is quiescent (no concurrent committer is
+        # mid-fence), so a torn record seen at startup is a permanent
+        # crash leftover — trim it.  Torn files that appear *later* are
+        # another live instance's in-flight commit and must be left
+        # alone (they heal via the refresh() signature check).
+        for name in list(self._torn):
+            (Path(self.io.root) / name).unlink(missing_ok=True)
+            del self._torn[name]
 
-    def _index_rids(self, rids) -> None:
-        in_range = [r for r in map(int, rids) if 0 <= r < 2**31 - 1]
-        self._oob.update(r for r in map(int, rids)
-                         if not 0 <= r < 2**31 - 1)
-        self._dedup.add(in_range)
+    @staticmethod
+    def _log_index(name: str) -> Optional[int]:
+        try:
+            return int(name[len("log_"):-len(".json")])
+        except ValueError:
+            return None
 
     def refresh(self) -> None:
         """Fold commits made by other RequestLog instances on the same log
         dir into the dedup index.  Incremental: only log records not yet
-        folded are parsed, so a refresh with nothing new is free."""
+        folded (and not known torn) are parsed, so a refresh with nothing
+        new is free.  A torn record is skipped while its on-disk (size,
+        mtime) signature is unchanged, but re-parsed once it changes — a
+        record caught mid-write by a slow concurrent committer heals
+        instead of being poisoned forever.  ``_n`` advances past every
+        existing log index — torn records included — so a commit never
+        reuses the slot of a record that is already on disk."""
         for p in sorted(Path(self.io.root).glob("log_*.json")):
             if p.name in self._folded:
                 continue
             try:
-                rids = [int(k) for k in json.loads(p.read_text())]
+                st = p.stat()
+            except FileNotFoundError:
+                continue
+            sig = (st.st_size, st.st_mtime_ns)
+            if self._torn.get(p.name) == sig:
+                continue    # unchanged since the failed parse: still torn
+            idx = self._log_index(p.name)
+            if idx is not None:
+                self._n = max(self._n, idx + 1)
+            try:
+                rec = {int(k): v
+                       for k, v in json.loads(p.read_text()).items()}
             except json.JSONDecodeError:
-                continue    # torn log record: trimmed by recovery semantics
+                # torn log record: trimmed by recovery semantics
+                self._torn[p.name] = sig
+                continue
+            self._torn.pop(p.name, None)
             self._folded.add(p.name)
-            self._index_rids(rids)
-        self._n = max(self._n, len(self._folded))
+            self._results.update(rec)
+            self._dedup.add(rec)
 
     def is_committed(self, rids: Sequence[int]) -> np.ndarray:
         """Batched exactly-once probe over the dedup map (bool[len(rids)]).
-        Rids representable as int32 go through the durable map; the rare
-        out-of-range rid falls back to a Python-set probe (the old
-        dict-based dedup accepted arbitrary ints)."""
-        rids = [int(r) for r in rids]
-        out = np.zeros(len(rids), np.bool_)
-        in_range = [(i, r) for i, r in enumerate(rids)
-                    if 0 <= r < 2**31 - 1]
-        if in_range:
-            idx, ks = zip(*in_range)
-            out[list(idx)] = self._dedup.contains(list(ks))
-        for i, r in enumerate(rids):
-            if not 0 <= r < 2**31 - 1:
-                out[i] = r in self._oob
-        return out
+        Arbitrary-int rids are fine: the index stores int32-representable
+        rids in the durable map and falls back to a Python-set probe for
+        the rare out-of-range one (the old dict-based dedup accepted
+        arbitrary ints)."""
+        return self._dedup.contains([int(r) for r in rids])
+
+    def _claim_slot(self) -> str:
+        """Atomically reserve the next free log slot (O_CREAT|O_EXCL), so
+        genuinely concurrent instances can never claim the same filename.
+        The zero-byte placeholder is a torn record until the fence lands
+        the payload; a crash in between leaves it torn, which recovery
+        semantics already skip (and ``_n`` derivation steps over)."""
+        while True:
+            rel = f"log_{self._n:06d}.json"
+            self._n += 1
+            try:
+                fd = os.open(Path(self.io.root) / rel,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                continue     # slot taken by another instance: skip it
+            os.close(fd)
+            return rel
 
     def commit(self, results: Dict[int, list]) -> None:
         """Commit a batch of finished requests (one fence for the batch —
-        the batched-map fence elision from core/batched.py)."""
-        rel = f"log_{self._n:06d}.json"
+        the batched-map fence elision from core/batched.py) into an
+        atomically claimed slot, so a concurrent RequestLog instance's
+        commit is never overwritten."""
+        rel = self._claim_slot()
         self.io.write(rel, json.dumps(results).encode())
         self.io.flush(rel)
         self.io.fence()
         self._folded.add(rel)
-        self._n += 1
-        self._index_rids(results)
+        rec = {int(k): list(v) for k, v in results.items()}
+        self._results.update(rec)
+        self._dedup.add(rec)
 
     def committed(self) -> Dict[int, list]:
-        out = {}
-        for p in sorted(Path(self.io.root).glob("log_*.json")):
-            try:
-                out.update({int(k): v
-                            for k, v in json.loads(p.read_text()).items()})
-            except json.JSONDecodeError:
-                continue    # torn log record: trimmed by recovery semantics
-        return out
+        """All committed results, incrementally maintained: refresh()
+        parses each durable log record exactly once and retains its
+        rid -> result payload, so this is O(new records), not a full
+        re-parse of the log per call.  Values are copied out so caller
+        mutation cannot diverge the cache from the durable records."""
+        self.refresh()
+        return {k: list(v) for k, v in self._results.items()}
 
 
 class ServeEngine:

@@ -145,6 +145,16 @@ def test_membership_index_grows_past_initial_capacity():
     assert not bool(idx.contains([5, 999]).any())
 
 
+def test_membership_index_out_of_range_keys_fall_back():
+    """Keys outside the int32 map space (stray step numbers, oob rids)
+    go to a Python-set side table instead of wrapping or raising."""
+    from repro.persistence.index import MembershipIndex
+    idx = MembershipIndex(capacity=8)
+    idx.add([5, 2**40, -3])
+    assert list(idx.contains([5, 2**40, -3, 2**41, 6])) == \
+        [True, True, True, False, False]
+
+
 def test_plan_phase_does_no_persistence_work():
     """The journey: planning a batch reads no fence/flush state and the
     failed ops of a commit add nothing to the accounting."""

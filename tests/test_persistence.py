@@ -103,6 +103,20 @@ def test_recovery_trims_corrupt_manifest_chain(tmp_path):
     assert man.step == 1
 
 
+def test_recovery_trims_stray_out_of_range_step_dir(tmp_path):
+    """A stray step_* directory whose number is outside the durable
+    map's int32 key space must be trimmed by recovery — not crash the
+    membership probe."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree(1))
+    stray = tmp_path / f"step_{2**40:08d}"
+    stray.mkdir()
+    (stray / "junk.npy").write_bytes(b"junk")
+    man = CheckpointManager(tmp_path).recover()
+    assert man.step == 1
+    assert not stray.exists()
+
+
 def test_gc_keeps_delta_references_alive(tmp_path):
     mgr = CheckpointManager(tmp_path)
     t = _tree(1)

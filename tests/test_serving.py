@@ -70,6 +70,72 @@ def test_request_log_dedup_oob_rids_and_cross_instance(tmp_path):
     assert bool(a.is_committed([42])[0])
 
 
+def test_request_log_torn_record_never_causes_overwrite(tmp_path):
+    """A torn log record earlier in the sequence must not shift later
+    commits onto occupied slots: restart derives the next log index from
+    the highest existing index (torn files included), so acknowledged
+    results are never silently destroyed."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({1: [1]})                           # log_000000.json
+    log.commit({2: [2]})                           # log_000001.json
+    log.commit({3: [3]})                           # log_000002.json
+    (tmp_path / "log_000001.json").write_text('{"2": [2')    # tear it
+    log2 = RequestLog(tmp_path)        # restart over the torn log
+    assert log2._n == 3                # past every slot seen on disk
+    # restart recovery trims the permanent torn record
+    assert not (tmp_path / "log_000001.json").exists()
+    log2.commit({4: [4]})              # lands on log_000003.json
+    got = log2.committed()
+    assert got[1] == [1] and got[3] == [3] and got[4] == [4]
+    assert list(log2.is_committed([1, 3, 4])) == [True] * 3
+    assert (tmp_path / "log_000003.json").exists()
+
+
+def test_request_log_concurrent_instances_never_collide(tmp_path):
+    """Two RequestLog instances on the same dir (no refresh between
+    commits): the second commit must not overwrite the first instance's
+    record — commit() claims its slot with an atomic O_EXCL create."""
+    from repro.serving.engine import RequestLog
+    a, b = RequestLog(tmp_path), RequestLog(tmp_path)
+    a.commit({1: [1]})
+    b.commit({2: [2]})
+    assert RequestLog(tmp_path).committed() == {1: [1], 2: [2]}
+
+
+def test_request_log_torn_record_heals_when_writer_completes(tmp_path):
+    """A record observed mid-write parses as torn, but must be retried
+    once its on-disk signature changes — a slow concurrent committer is
+    not poisoned forever in the reader's dedup index."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    p = tmp_path / "log_000000.json"
+    p.write_text('{"9": [1')             # reader overtakes the writer
+    log.refresh()
+    assert not log.is_committed([9])[0]
+    assert "log_000000.json" in log._torn
+    p.write_text('{"9": [1, 2]}')        # the writer's fence completes
+    log.refresh()
+    assert bool(log.is_committed([9])[0])
+    assert "log_000000.json" not in log._torn
+
+
+def test_request_log_crash_between_claim_and_fence(tmp_path):
+    """A crash after the slot claim but before the fence leaves a
+    zero-byte placeholder: restart recovery trims it and later commits
+    step past its slot."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log._claim_slot()                    # placeholder, payload never fenced
+    log.io.crash(evict="none")
+    log2 = RequestLog(tmp_path)
+    assert not (tmp_path / "log_000000.json").exists()   # trimmed
+    log2.commit({5: [5]})
+    assert (tmp_path / "log_000001.json").exists()       # slot not reused
+    assert log2.committed() == {5: [5]}
+    assert bool(log2.is_committed([5])[0])
+
+
 def test_serve_results_match_teacher_forcing(setup, tmp_path):
     """The engine's prefill+decode greedy path agrees with running the
     model once over the full (prompt + generated) sequence."""

@@ -8,26 +8,43 @@ serving request dedup) and benchmarked for real throughput.
 Design: node-pool arrays + bucket heads.  Two update engines share the
 same state and the same abstract semantics:
 
-**Sequential scan engine** (``insert`` / ``delete``) — the oracle.  A
-batch is *serialized deterministically* (scan order is the linearization
-order), each op runs as one ``lax.scan`` step containing a serial
-``lax.while_loop`` chain walk.  Kept as the reference the durability
-checker and the equivalence tests validate against.
+**Sequential scan engine** (``insert`` / ``delete``, plus the mixed-op
+``apply``) — the oracle.  A batch is *serialized deterministically*
+(scan order is the linearization order), each op runs as one
+``lax.scan`` step containing a serial ``lax.while_loop`` chain walk.
+``apply`` takes per-op codes (:data:`OP_INSERT` / :data:`OP_DELETE`) and
+is the linearization reference for mixed insert/delete batches.  Kept as
+the reference the durability checker and the equivalence tests validate
+against.
 
-**Plan/commit engine** (``insert_parallel`` / ``delete_parallel``) — the
-hot path.  The paper's split, taken literally:
+**Plan/commit engine** (``update_parallel``, with ``insert_parallel`` /
+``delete_parallel`` as homogeneous-batch wrappers) — the hot path.  The
+paper's split, taken literally:
 
   * *plan* (the journey): every op's destination — bucket, existing node,
     resurrect-vs-fresh — is located by a fully ``vmap``-parallel chain
     walk over the pre-batch snapshot, with **zero persistence
     accounting**;
-  * *commit* (the destination): ops are sorted by bucket (stable, so
-    batch order is preserved inside a group) and conflicts are resolved
-    with segment-scan primitives *within* same-bucket groups only —
-    first-occurrence-of-key wins, fresh node ids are assigned by a
-    prefix-sum over batch order so allocation matches the oracle
-    bit-for-bit, and chains are linked newest-first exactly as the
-    sequential engine would have;
+  * *commit* (the destination): ops are sorted by key (stable, so batch
+    order is preserved inside a group) and duplicate-key conflicts are
+    resolved with a **merged conflict-resolution pass** — a per-key
+    segment scan that composes each op's effect on the {live, dead}
+    liveness state in batch order.  The composition collapses because
+    the post-state of any op is determined by the op alone (after an
+    INSERT the key is live whether the op succeeded or not; after a
+    DELETE it is dead either way), so an op's success needs only its
+    *predecessor's* op code: ``ok = is_insert XOR prev_live``, with the
+    pre-batch snapshot's liveness seeding each segment.  Insert succeeds
+    iff the key is currently dead/absent, delete iff currently live, so
+    duplicate keys with alternating ops get oracle-identical results —
+    the first-occurrence-wins dedup of the homogeneous engines is the
+    degenerate case (at most one op per key can flip the seed state).
+    A key absent from the snapshot allocates on its *first successful
+    insert* only (later successful inserts of the group resurrect that
+    node in place); fresh node ids are assigned by a prefix-sum over
+    batch order so allocation matches the oracle bit-for-bit, and
+    chains are linked newest-first exactly as the sequential engine
+    would have (deletes are logical marks and never relink);
   * the per-op NVTraverse accounting (Protocol 2: flush(node fields),
     fence, publish CAS, flush(bucket head), fence — **O(1) flushes +
     2 fences per update, 0 during the journey**) is preserved identically
@@ -54,6 +71,9 @@ import jax
 import jax.numpy as jnp
 
 NULL = jnp.int32(0)   # node id 0 is reserved as null
+
+OP_INSERT = 0         # per-op codes for the mixed engines (apply /
+OP_DELETE = 1         # update_parallel)
 
 
 class HashMapState(NamedTuple):
@@ -200,6 +220,85 @@ def delete(state: HashMapState, ks: jax.Array, n_buckets: int):
     return state, ok
 
 
+@partial(jax.jit, static_argnames="n_buckets")
+def apply(state: HashMapState, ops: jax.Array, ks: jax.Array,
+          vs: jax.Array, n_buckets: int):
+    """Sequential *mixed* oracle: one batch of interleaved inserts and
+    deletes, serialized in batch order (the linearization order).
+
+    ``ops[i]`` is :data:`OP_INSERT` or :data:`OP_DELETE`.  Insert
+    succeeds iff the key is currently dead/absent (a dead node is
+    resurrected in place; an absent key allocates a fresh node — failing
+    cleanly when the pool is full, matching :func:`update_parallel`
+    rather than :func:`insert`'s silent overflow); delete succeeds iff
+    the key is currently live.  Returns ``(state', ok bool[batch])``.
+    """
+    cap = state.key.shape[0]
+
+    def step(st: HashMapState, okv):
+        op, k, v = okv
+        node, _ = _find(st, k, n_buckets)
+        exists_live = (node != NULL) & st.live[node]
+
+        def do_resurrect(st):
+            return st._replace(
+                val=st.val.at[node].set(v),
+                live=st.live.at[node].set(True),
+                flushes=st.flushes + 1,
+                fences=st.fences + 2,
+            ), jnp.bool_(True)
+
+        def do_fresh(st):
+            def full(st):
+                return st, jnp.bool_(False)
+
+            def alloc(st):
+                b = bucket_of(k, n_buckets)
+                nid = st.cursor
+                return st._replace(
+                    key=st.key.at[nid].set(k),
+                    val=st.val.at[nid].set(v),
+                    nxt=st.nxt.at[nid].set(st.head[b]),
+                    live=st.live.at[nid].set(True),
+                    head=st.head.at[b].set(nid),
+                    cursor=st.cursor + 1,
+                    flushes=st.flushes + 2,
+                    fences=st.fences + 2,
+                ), jnp.bool_(True)
+
+            return jax.lax.cond(st.cursor < cap, alloc, full, st)
+
+        def insert_op(st):
+            def fail(st):
+                return st, jnp.bool_(False)
+
+            def attempt(st):
+                dead_here = (node != NULL) & ~st.live[node]
+                return jax.lax.cond(dead_here, do_resurrect, do_fresh, st)
+
+            return jax.lax.cond(exists_live, fail, attempt, st)
+
+        def delete_op(st):
+            def do(st):
+                return st._replace(
+                    live=st.live.at[node].set(False),
+                    flushes=st.flushes + 1,
+                    fences=st.fences + 2,
+                ), jnp.bool_(True)
+
+            def skip(st):
+                return st, jnp.bool_(False)
+
+            return jax.lax.cond(exists_live, do, skip, st)
+
+        return jax.lax.cond(op == OP_INSERT, insert_op, delete_op, st)
+
+    state, ok = jax.lax.scan(step, state, (ops.astype(jnp.int32),
+                                           ks.astype(jnp.int32),
+                                           vs.astype(jnp.int32)))
+    return state, ok
+
+
 # --------------------------------------------------------------------- #
 # plan/commit engine (the hot path)                                       #
 # --------------------------------------------------------------------- #
@@ -223,19 +322,12 @@ class CommitStats(NamedTuple):
 def _plan(state: HashMapState, ks: jax.Array, n_buckets: int):
     """The journey, batch-wide: locate every op's destination against the
     pre-batch snapshot with a vmap'd chain walk.  No persistence state is
-    read or written.  Returns (node, snap_live, bucket, first) where
-    ``first`` marks the first occurrence of each key in batch order —
-    the only op of a duplicate-key group that can commit."""
+    read or written."""
     node = jax.vmap(lambda k: _find(state, k, n_buckets)[0])(ks)
-    snap_live = (node != NULL) & state.live[node]
+    snap_exists = node != NULL
+    snap_live = snap_exists & state.live[node]
     bucket = bucket_of(ks, n_buckets)
-    n = ks.shape[0]
-    order = jnp.argsort(ks)                     # stable: ties keep batch order
-    sk = ks[order]
-    first_sorted = jnp.concatenate(
-        [jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]])
-    first = jnp.zeros(n, jnp.bool_).at[order].set(first_sorted)
-    return node, snap_live, bucket, first
+    return node, snap_exists, snap_live, bucket
 
 
 def _commit_stats(bucket: jax.Array, ok: jax.Array, flushes_per_op,
@@ -254,53 +346,119 @@ def _commit_stats(bucket: jax.Array, ok: jax.Array, flushes_per_op,
 
 
 @partial(jax.jit, static_argnames="n_buckets")
-def insert_parallel(state: HashMapState, ks: jax.Array, vs: jax.Array,
-                    n_buckets: int):
-    """Batch insert via plan/commit.  Bit-identical to :func:`insert`
-    (state, per-op results, flush/fence accounting); returns
-    ``(state', ok bool[batch], CommitStats)``.
+def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
+                    vs: jax.Array, n_buckets: int):
+    """Unified mixed-op engine: one plan/commit round over interleaved
+    inserts and deletes (``ops[i]`` ∈ {:data:`OP_INSERT`,
+    :data:`OP_DELETE`}).  Bit-identical to the sequential mixed oracle
+    :func:`apply` (state arrays, per-op ok flags, flush/fence
+    accounting); returns ``(state', ok bool[batch], CommitStats)``.
 
-    One deliberate divergence: on node-pool exhaustion the scan oracle
-    silently drops node writes while still publishing the (dangling) id
-    into the bucket head; here a fresh insert that would not fit simply
-    *fails* (``ok=False``, no state change) — full-map overflow is
+    Conflict resolution is a per-key segment scan over the batch sorted
+    stably by key: within a duplicate-key group the liveness state after
+    any op equals the op's own code (live after an insert, dead after a
+    delete, successful or not), so ``ok = is_insert XOR prev_live`` with
+    the pre-batch snapshot seeding each group.  A key absent from the
+    snapshot allocates a node at its first successful insert only; every
+    later successful insert of the group resurrects that node in place,
+    so at most one node per key per batch.  The group's *last*
+    successful op decides the node's final liveness and its last
+    successful insert the final value — one scatter per array, no
+    duplicate-index races.
+
+    One deliberate divergence from the homogeneous scan engines: on
+    node-pool exhaustion :func:`insert` silently drops node writes while
+    still publishing the (dangling) id into the bucket head; here (and
+    in :func:`apply`) an insert that would not fit simply *fails*
+    (``ok=False``, no state change) — and every later op of its
+    duplicate-key group fails with it, exactly as re-running each op
+    against the still-exhausted pool would.  Full-map overflow is
     detectable by the caller instead of corrupting chains."""
+    ops = ops.astype(jnp.int32)
     ks = ks.astype(jnp.int32)
     vs = vs.astype(jnp.int32)
     n = ks.shape[0]
     cap = state.key.shape[0]
+    if n == 0:                       # static shape: an empty batch is a no-op
+        empty = jnp.zeros(0, jnp.int32)
+        return state, jnp.zeros(0, jnp.bool_), _commit_stats(
+            empty, jnp.zeros(0, jnp.bool_), empty, n_buckets)
 
     # ---- plan: the journey, fully parallel, zero persistence ---------- #
-    node, snap_live, bucket, first = _plan(state, ks, n_buckets)
-    ok = first & ~snap_live
-    snap_dead = (node != NULL) & ~snap_live
-    fresh = ok & ~snap_dead
+    node, snap_exists, snap_live, bucket = _plan(state, ks, n_buckets)
+    is_ins = ops == OP_INSERT
+
+    # ---- merged conflict resolution: per-key liveness composition ----- #
+    order = jnp.argsort(ks)            # stable: ties keep batch order
+    sk = ks[order]
+    s_ins = is_ins[order]
+    s_node = node[order]
+    s_exists = snap_exists[order]
+    first = jnp.concatenate([jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]])
+    prev_live = jnp.where(
+        first, snap_live[order],
+        jnp.concatenate([jnp.zeros((1,), jnp.bool_), s_ins[:-1]]))
+    s_ok = s_ins ^ prev_live    # insert iff dead/absent, delete iff live
+    s_okins = s_ok & s_ins
+
+    # segment machinery: segment id + scatter-min/max over segments
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    pos = jnp.arange(n, dtype=jnp.int32)
+
+    # the allocator of an absent-key group is its first successful insert
+    first_okins = jnp.full(n, n, jnp.int32).at[seg].min(
+        jnp.where(s_okins, pos, n))
+    s_alloc = s_okins & (pos == first_okins[seg]) & ~s_exists
 
     # ---- commit: allocation in batch order (oracle-identical ids) ----- #
-    # an op that would allocate past the pool fails; failed ops consume
-    # no id, so the surviving ids are exactly cursor, cursor+1, …
-    fresh_rank = jnp.cumsum(fresh.astype(jnp.int32)) - fresh
-    fresh = fresh & (state.cursor + fresh_rank < cap)
-    ok = fresh | (ok & snap_dead)
-    resurrect = ok & snap_dead
-    fresh_i32 = fresh.astype(jnp.int32)
-    nid = jnp.where(fresh, state.cursor + fresh_rank, node)
+    # an op that would allocate past the pool fails; failed allocators
+    # consume no id, so the surviving ids are exactly cursor, cursor+1, …
+    alloc = jnp.zeros(n, jnp.bool_).at[order].set(s_alloc)
+    rank = jnp.cumsum(alloc.astype(jnp.int32)) - alloc
+    alloc = alloc & (state.cursor + rank < cap)
+    # a capacity-failed allocator fails its entire duplicate-key group
+    # (the key stays absent for the whole batch: the pool only grows)
+    s_alloc_ok = alloc[order]
+    dead_seg = jnp.zeros(n, jnp.int32).at[seg].max(
+        (s_alloc & ~s_alloc_ok).astype(jnp.int32))
+    s_ok = s_ok & (dead_seg[seg] == 0)
+    s_okins = s_ok & s_ins
+    s_alloc = s_alloc & s_alloc_ok
+
+    # group node id: the snapshot node, or the allocator's fresh id
+    # broadcast to its group (failed ops never write, so the 0 the
+    # pre-allocator ops of a capacity-failed group see is harmless)
+    s_fresh_nid = jnp.where(s_alloc, state.cursor + rank[order], 0)
+    seg_nid = jnp.zeros(n, jnp.int32).at[seg].max(s_fresh_nid)
+    s_nid = s_node + seg_nid[seg]           # s_node == 0 in absent groups
+
+    # the last successful op / insert of each group decide final values
+    last_ok = jnp.full(n, -1, jnp.int32).at[seg].max(
+        jnp.where(s_ok, pos, -1))
+    s_write_live = s_ok & (pos == last_ok[seg])
+    last_okins = jnp.full(n, -1, jnp.int32).at[seg].max(
+        jnp.where(s_okins, pos, -1))
+    s_write_val = s_okins & (pos == last_okins[seg])
 
     # node-field publication (masked ops scatter out of bounds → dropped)
-    widx = jnp.where(ok, nid, cap)
-    key = state.key.at[widx].set(ks, mode="drop")
-    val = state.val.at[widx].set(vs, mode="drop")
-    live = state.live.at[widx].set(True, mode="drop")
+    sv = vs[order]
+    key = state.key.at[jnp.where(s_alloc, s_nid, cap)].set(sk, mode="drop")
+    val = state.val.at[jnp.where(s_write_val, s_nid, cap)].set(
+        sv, mode="drop")
+    live = state.live.at[jnp.where(s_write_live, s_nid, cap)].set(
+        s_ins, mode="drop")
 
-    # chain linking: sort fresh ops by (bucket, batch index); inside a
-    # bucket group each fresh node points at its predecessor in the
-    # group, the group's first at the snapshot head, and the group's
+    # chain linking: sort fresh allocations by (bucket, batch index);
+    # inside a bucket group each fresh node points at its predecessor in
+    # the group, the group's first at the snapshot head, and the group's
     # last becomes the new head — newest-first, exactly the scan order.
-    bkey = jnp.where(fresh, bucket, n_buckets)      # non-fresh sort last
-    order = jnp.argsort(bkey)                       # stable within groups
-    sb = bkey[order]
-    snid = nid[order]
-    sfresh = fresh[order]
+    # (Logical deletes never relink, so only allocators touch chains.)
+    nid_b = jnp.where(alloc, state.cursor + rank, 0)
+    bkey = jnp.where(alloc, bucket, n_buckets)      # non-fresh sort last
+    order2 = jnp.argsort(bkey)                      # stable within groups
+    sb = bkey[order2]
+    snid = nid_b[order2]
+    sfresh = alloc[order2]
     same_prev = jnp.concatenate(
         [jnp.zeros((1,), jnp.bool_), sb[1:] == sb[:-1]])
     link = jnp.where(same_prev,
@@ -313,33 +471,37 @@ def insert_parallel(state: HashMapState, ks: jax.Array, vs: jax.Array,
     head = state.head.at[jnp.where(group_last, sb, n_buckets)].set(
         snid, mode="drop")
 
-    # oracle accounting: fresh = 2 flushes, resurrect = 1, +2 fences each
-    flushes_per_op = jnp.where(fresh, 2, jnp.where(resurrect, 1, 0))
+    # oracle accounting: fresh = 2 flushes, resurrect/delete = 1,
+    # +2 fences per successful op
+    ok = jnp.zeros(n, jnp.bool_).at[order].set(s_ok)
+    flushes_per_op = jnp.where(alloc, 2, jnp.where(ok, 1, 0))
     state = state._replace(
         key=key, val=val, nxt=nxt, live=live, head=head,
-        cursor=state.cursor + fresh_i32.sum(),
+        cursor=state.cursor + alloc.astype(jnp.int32).sum(),
         flushes=state.flushes + flushes_per_op.sum(),
         fences=state.fences + 2 * ok.sum(),
     )
     return state, ok, _commit_stats(bucket, ok, flushes_per_op, n_buckets)
 
 
-@partial(jax.jit, static_argnames="n_buckets")
+def insert_parallel(state: HashMapState, ks: jax.Array, vs: jax.Array,
+                    n_buckets: int):
+    """Batch insert via plan/commit — :func:`update_parallel` with a
+    homogeneous :data:`OP_INSERT` batch.  Bit-identical to :func:`insert`
+    (state, per-op results, flush/fence accounting) except for the clean
+    fail on pool exhaustion (see :func:`update_parallel`); returns
+    ``(state', ok bool[batch], CommitStats)``."""
+    ops = jnp.full(jnp.shape(ks), OP_INSERT, jnp.int32)
+    return update_parallel(state, ops, ks, vs, n_buckets)
+
+
 def delete_parallel(state: HashMapState, ks: jax.Array, n_buckets: int):
-    """Batch logical delete via plan/commit; oracle-identical to
+    """Batch logical delete via plan/commit — :func:`update_parallel`
+    with a homogeneous :data:`OP_DELETE` batch; oracle-identical to
     :func:`delete`.  Returns ``(state', ok bool[batch], CommitStats)``."""
-    ks = ks.astype(jnp.int32)
-    cap = state.key.shape[0]
-    node, snap_live, bucket, first = _plan(state, ks, n_buckets)
-    ok = first & snap_live
-    live = state.live.at[jnp.where(ok, node, cap)].set(False, mode="drop")
-    flushes_per_op = jnp.where(ok, 1, 0)
-    state = state._replace(
-        live=live,
-        flushes=state.flushes + flushes_per_op.sum(),
-        fences=state.fences + 2 * ok.sum(),
-    )
-    return state, ok, _commit_stats(bucket, ok, flushes_per_op, n_buckets)
+    ops = jnp.full(jnp.shape(ks), OP_DELETE, jnp.int32)
+    return update_parallel(state, ops, ks, jnp.zeros_like(ks, jnp.int32),
+                           n_buckets)
 
 
 @partial(jax.jit, static_argnames="n_buckets")

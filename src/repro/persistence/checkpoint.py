@@ -34,7 +34,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from .index import live_step_index
+from .index import MembershipIndex, live_step_index
 from .manifest import (Manifest, StagedIO, digest, list_step_dirs,
                        manifest_rel)
 
@@ -64,6 +64,9 @@ class CheckpointManager:
         self.io = StagedIO(Path(root), seed=seed)
         self.policy = policy
         self._last_manifest: Optional[Manifest] = None
+        # live-step membership index, kept current across recover()/gc()
+        # passes by mixed add/remove rounds instead of per-pass rebuilds
+        self._step_index = MembershipIndex()
 
     # ------------------------------------------------------------------ #
     def save(self, step: int, tree, aux: Optional[dict] = None,
@@ -140,11 +143,13 @@ class CheckpointManager:
     def _trim_dead(self, manifests, candidates) -> None:
         """Remove every candidate step dir that no surviving manifest
         commits or delta-references.  Liveness is a membership probe on
-        the durable-map manifest index (persistence/index.py)."""
+        the durable-map manifest index (persistence/index.py); the index
+        is updated in place — newly dead steps are trimmed from the live
+        index by one mixed insert/delete round, not a rebuild."""
         keep_files = set()
         for man in manifests:
             keep_files.update(info["file"] for info in man.files.values())
-        idx = live_step_index(manifests, keep_files)
+        idx = live_step_index(manifests, keep_files, self._step_index)
         for step, alive in zip(candidates, idx.contains(candidates)):
             if not alive:
                 self.io.remove_tree(f"step_{step:08d}")

@@ -6,13 +6,14 @@ reference a file it owns?"  At a few checkpoints the Python-set answer is
 free; at production retention depths (thousands of delta-chained steps ×
 dozens of shards) it is a hash-map workload, so it runs on the same
 plan/commit engine (:mod:`repro.core.batched`) the serving path uses:
-one ``insert_parallel`` batch to build the index (the commit), one
-``vmap``'d :func:`repro.core.batched.lookup` batch to classify every
-step dir (the journey — zero persistence work).
+one mixed ``update_parallel`` batch keeps the index current (new live
+steps enter, dead steps leave — one commit round), one ``vmap``'d
+:func:`repro.core.batched.lookup` batch classifies every step dir (the
+journey — zero persistence work).
 """
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,17 +35,23 @@ class MembershipIndex:
     int32-keyed durable map as ``key + 1`` (node id 0 is the map's
     reserved null, so key 0 is avoided); the rare out-of-range key falls
     back to a Python-set side table rather than silently wrapping (the
-    dict probe this index replaces took arbitrary ints).  The node pool
-    doubles when a batch would not fit — ``insert_parallel`` fails
+    dict probe this index replaces took arbitrary ints).
+
+    :meth:`update` commits adds *and* removes in one mixed plan/commit
+    round (``batched.update_parallel``): removes are logical deletes on
+    the durable map, so a removed key's node slot is reclaimed by
+    resurrection if the key ever returns.  The node pool doubles when a
+    batch's fresh inserts would not fit — ``update_parallel`` fails
     cleanly on exhaustion rather than corrupting chains, but an index
-    must never drop members, so growth happens *before* the commit."""
+    must never drop members, so growth happens *before* the commit
+    (dead nodes are dropped by the rebuild, which re-inserts only the
+    live member set)."""
 
     def __init__(self, capacity: int = 4096, n_buckets: int = N_BUCKETS):
         self.n_buckets = n_buckets
         self.capacity = capacity
         self.state = batched.make_state(capacity, n_buckets)
-        self._keys = np.zeros(0, np.int32)       # members, for rebuilds
-        self._members: set = set()               # same, for O(1) add dedup
+        self._members: set = set()               # live in-range members
         self._oob: set = set()     # members outside the int32 key space
         self.last_stats = None
 
@@ -53,41 +60,79 @@ class MembershipIndex:
         return 0 <= k < 2**31 - 1
 
     @staticmethod
-    def _pad_pow2(ks: np.ndarray) -> np.ndarray:
-        """Pad a key batch to the next power of two with a duplicate of
-        its first key, capping jit retraces at one per (log2 size,
-        capacity) instead of one per distinct batch length.  Duplicates
-        never commit, so padding is invisible to the map."""
-        n = max(1, 1 << (ks.size - 1).bit_length())
-        return np.concatenate([ks, np.full(n - ks.size, ks[0], np.int32)])
+    def _pad_pow2(xs: np.ndarray) -> np.ndarray:
+        """Pad a batch to the next power of two with duplicates of its
+        *last* element, capping jit retraces at one per (log2 size,
+        capacity) instead of one per distinct batch length.  A duplicate
+        of the batch's last op never commits — after an insert the key is
+        live (a repeat insert fails), after a delete it is dead (a repeat
+        delete fails) — so padding is invisible to the map.  Duplicating
+        the *first* op would not be safe in a mixed batch: an insert
+        replayed after a later delete of the same key would resurrect
+        it."""
+        n = max(1, 1 << (xs.size - 1).bit_length())
+        return np.concatenate([xs, np.full(n - xs.size, xs[-1], xs.dtype)])
 
-    def add(self, keys: Iterable[int]) -> None:
-        keys = {int(k) for k in keys}
-        self._oob.update(k for k in keys if not self._in_range(k))
-        # already-members are a no-op; the set probe keeps the dedup
-        # O(batch) instead of np.isin's O(members) re-scan per add
-        ks = np.asarray(sorted(k for k in keys if self._in_range(k)
-                               and k not in self._members), np.int32)
-        if ks.size == 0:
+    @property
+    def members(self) -> set:
+        """The current member set (copy), side-table keys included."""
+        return self._members | self._oob
+
+    def update(self, add_keys: Iterable[int] = (),
+               remove_keys: Iterable[int] = ()) -> None:
+        """Commit adds and removes in one mixed plan/commit round.
+
+        Batch order is adds-then-removes, so a key named in both leaves
+        the index (the remove wins)."""
+        adds = {int(k) for k in add_keys}
+        rems = {int(k) for k in remove_keys}
+        self._oob.update(k for k in adds if not self._in_range(k))
+        self._oob.difference_update(k for k in rems
+                                    if not self._in_range(k))
+        # already-members / non-members are no-ops; the set probes keep
+        # the dedup O(batch) instead of an O(members) re-scan per call
+        ins_set = {k for k in adds
+                   if self._in_range(k) and k not in self._members}
+        del_set = {k for k in rems if self._in_range(k)
+                   and (k in self._members or k in ins_set)}
+        ins = np.asarray(sorted(ins_set), np.int32)
+        dels = np.asarray(sorted(del_set), np.int32)
+        if ins.size + dels.size == 0:
             return
-        # cursor starts at 1; worst case every key in the batch is fresh
-        needed = 1 + self._keys.size + ks.size
-        if needed > self.capacity:
-            while needed > self.capacity:
+        # cursor counts pool slots already allocated (+1 for null); the
+        # worst case allocates one fresh node per insert.  Removed keys
+        # keep their (dead) nodes until a rebuild, so cursor — not the
+        # member count — is the right fullness measure.
+        if int(self.state.cursor) + ins.size > self.capacity:
+            live = np.asarray(sorted(self._members), np.int32)
+            while 1 + live.size + ins.size > self.capacity:
                 self.capacity *= 2
             self.state = batched.make_state(self.capacity, self.n_buckets)
-            if self._keys.size:
-                old = jnp.asarray(self._pad_pow2(self._keys) + 1)
+            if live.size:
+                old = jnp.asarray(self._pad_pow2(live) + 1)
                 self.state, _, _ = batched.insert_parallel(
                     self.state, old, old, self.n_buckets)
-        n = ks.size
-        padded = self._pad_pow2(ks)
-        self.state, ok, self.last_stats = batched.insert_parallel(
-            self.state, jnp.asarray(padded + 1), jnp.asarray(padded + 1),
+        n_ops = ins.size + dels.size
+        ks = np.concatenate([ins, dels])
+        ops = np.concatenate([
+            np.full(ins.size, batched.OP_INSERT, np.int32),
+            np.full(dels.size, batched.OP_DELETE, np.int32)])
+        pk = jnp.asarray(self._pad_pow2(ks) + 1)
+        self.state, ok, self.last_stats = batched.update_parallel(
+            self.state, jnp.asarray(self._pad_pow2(ops)), pk, pk,
             self.n_buckets)
-        committed = ks[np.asarray(ok)[:n]]
-        self._keys = np.concatenate([self._keys, committed])
-        self._members.update(int(k) for k in committed)
+        okh = np.asarray(ok)[:n_ops]
+        self._members.update(int(k) for k in ins[okh[:ins.size]])
+        self._members.difference_update(
+            int(k) for k in dels[okh[ins.size:]])
+
+    def add(self, keys: Iterable[int]) -> None:
+        self.update(add_keys=keys)
+
+    def remove(self, keys: Iterable[int]) -> None:
+        """Logical batched delete on the same engine; a later re-add of
+        the key resurrects its node in place (no fresh allocation)."""
+        self.update(remove_keys=keys)
 
     def contains(self, keys: Sequence[int]) -> np.ndarray:
         keys = [int(k) for k in keys]
@@ -107,15 +152,22 @@ class MembershipIndex:
         return out
 
 
-def live_step_index(manifests, keep_files: Iterable[str]) -> MembershipIndex:
+def live_step_index(manifests, keep_files: Iterable[str],
+                    idx: Optional[MembershipIndex] = None
+                    ) -> MembershipIndex:
     """Index of every step that must survive a trim pass: steps with a
     valid/surviving manifest plus owner steps of all delta-referenced
-    files (an old step stays alive while any survivor references it)."""
-    idx = MembershipIndex()
+    files (an old step stays alive while any survivor references it).
+
+    When ``idx`` is given it is updated *in place* — newly live steps
+    enter and since-died steps leave in one mixed plan/commit round —
+    instead of rebuilding the map from scratch per pass."""
     steps = set()
     for man in manifests:
         steps.add(man.step)
     for rel in keep_files:
         steps.add(owner_step(rel))
-    idx.add(steps)
+    if idx is None:
+        idx = MembershipIndex()
+    idx.update(steps, idx.members - steps)
     return idx

@@ -31,10 +31,17 @@ class RequestLog:
 
     The committed-rid set is mirrored into a durable-map
     :class:`~repro.persistence.index.MembershipIndex` (rebuilt from the
-    log on restart, extended by one plan/commit batch per commit), so
-    the exactly-once check in :meth:`ServeEngine.serve` is a batched,
+    log on restart, updated by one *mixed* plan/commit round per commit:
+    new rids insert, expired rids delete, in a single batch), so the
+    exactly-once check in :meth:`ServeEngine.serve` is a batched,
     persistence-free lookup — the journey — instead of a Python dict
     probe per request."""
+
+    # upper bound on the filesystem timestamp granule (1-10 ms coarse
+    # clock on modern Linux, but a full second on ext3/HFS+/some network
+    # mounts; leave headroom): an mtime younger than this never
+    # authorizes the refresh() fast path
+    _RACY_NS = 2_000_000_000
 
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15):
         self.io = StagedIO(Path(root), seed=seed)
@@ -43,6 +50,7 @@ class RequestLog:
         self._torn: dict = {}      # torn filename -> (size, mtime_ns) seen
         self._results: Dict[int, list] = {}   # rid -> committed result
         self._n = 0                # next log index: 1 + highest seen
+        self._dir_mtime: Optional[int] = None  # log dir mtime at last scan
         self.refresh()
         # recovery: a restart is quiescent (no concurrent committer is
         # mid-fence), so a torn record seen at startup is a permanent
@@ -62,38 +70,128 @@ class RequestLog:
 
     def refresh(self) -> None:
         """Fold commits made by other RequestLog instances on the same log
-        dir into the dedup index.  Incremental: only log records not yet
-        folded (and not known torn) are parsed, so a refresh with nothing
-        new is free.  A torn record is skipped while its on-disk (size,
-        mtime) signature is unchanged, but re-parsed once it changes — a
-        record caught mid-write by a slow concurrent committer heals
-        instead of being poisoned forever.  ``_n`` advances past every
-        existing log index — torn records included — so a commit never
-        reuses the slot of a record that is already on disk."""
-        for p in sorted(Path(self.io.root).glob("log_*.json")):
-            if p.name in self._folded:
-                continue
+        dir into the dedup index.  Incremental twice over: the directory
+        scan is skipped entirely while the log dir's mtime is unchanged
+        since the last scan (record files are only ever *created*, so new
+        commits always bump it) and no torn record is pending a re-check
+        — a refresh with nothing new is a single ``stat``, keeping
+        ``serve()`` O(new records) instead of O(total historical
+        records).  When the scan does run, only log records not yet
+        folded (and not known torn) are parsed."""
+        now = self._fs_now()     # BEFORE the stat/scan: see guard below
+        if now is None:          # log dir itself is gone
+            return
+        try:
+            dir_mtime = os.stat(self.io.root).st_mtime_ns
+        except FileNotFoundError:
+            return
+        if dir_mtime == self._dir_mtime:
+            # nothing was created/renamed/removed; known torn records can
+            # still *heal* (their content changes without touching the
+            # dir mtime), so re-stat just those — O(torn), usually zero
+            self._check_torn()
+            return
+        self._scan()
+        # The racy-timestamp guard (à la git's index): directory mtimes
+        # come from the filesystem's coarse clock, so a record created in
+        # the same clock granule as ``dir_mtime`` — even *after* this
+        # scan's directory listing — leaves the mtime unchanged.  Cache
+        # the mtime (enabling the fast path above) only if its granule
+        # had already closed before this scan started (``now`` is taken
+        # before the stat, which precedes the listing); otherwise leave
+        # the cache invalid so the next refresh rescans.  ``now`` is read
+        # from the *filesystem's* clock (a sentinel-file utime), not the
+        # local one — on network mounts the two can disagree by more than
+        # the granule.
+        self._dir_mtime = (dir_mtime
+                           if now - dir_mtime > self._RACY_NS else None)
+
+    def _fs_now(self) -> Optional[int]:
+        """The log-dir filesystem's current time: utime a sentinel file
+        and read its mtime back.  Updating an *existing* file never
+        touches the parent directory's mtime, so the probe is invisible
+        to the fast-path check (only its one-time creation bumps it).
+        Returns None when the log dir itself has been removed."""
+        clock = Path(self.io.root) / ".clock"
+        try:
+            os.utime(clock)
+        except FileNotFoundError:
             try:
-                st = p.stat()
+                clock.touch()
             except FileNotFoundError:
-                continue
-            sig = (st.st_size, st.st_mtime_ns)
-            if self._torn.get(p.name) == sig:
-                continue    # unchanged since the failed parse: still torn
-            idx = self._log_index(p.name)
-            if idx is not None:
-                self._n = max(self._n, idx + 1)
-            try:
-                rec = {int(k): v
-                       for k, v in json.loads(p.read_text()).items()}
-            except json.JSONDecodeError:
-                # torn log record: trimmed by recovery semantics
-                self._torn[p.name] = sig
-                continue
-            self._torn.pop(p.name, None)
-            self._folded.add(p.name)
-            self._results.update(rec)
-            self._dedup.add(rec)
+                return None
+        return os.stat(clock).st_mtime_ns
+
+    def _scan(self) -> None:
+        """One pass over the log dir, O(directory entries): already-folded
+        names are dropped before the (slot-order) sort and never stat'd
+        or re-parsed, so only *new* records cost anything."""
+        try:
+            with os.scandir(self.io.root) as it:
+                fresh = [e.name for e in it
+                         if e.name.startswith("log_")
+                         and e.name.endswith(".json")
+                         and e.name not in self._folded]
+        except FileNotFoundError:
+            return
+        for name in sorted(fresh):       # slot order = linearization order
+            self._try_fold(name)
+
+    def _check_torn(self) -> None:
+        """Re-stat only the known-torn records; a stable signature costs
+        one stat, a changed one re-parses (heals)."""
+        for name in sorted(self._torn):
+            self._try_fold(name)
+
+    def _try_fold(self, name: str) -> None:
+        """Stat/parse one log record and fold it into the caches if it is
+        whole.  A torn record is skipped while its on-disk (size, mtime)
+        signature is unchanged, but re-parsed once it changes — a record
+        caught mid-write by a slow concurrent committer heals instead of
+        being poisoned forever.  ``_n`` advances past every seen log
+        index — torn records included — so a commit never reuses the
+        slot of a record that is already on disk."""
+        p = Path(self.io.root) / name
+        try:
+            st = p.stat()
+        except FileNotFoundError:
+            return
+        sig = (st.st_size, st.st_mtime_ns)
+        if self._torn.get(name) == sig:
+            return      # unchanged since the failed parse: still torn
+        idx = self._log_index(name)
+        if idx is not None:
+            self._n = max(self._n, idx + 1)
+        try:
+            rec, evict = self._parse_record(p.read_text())
+        except json.JSONDecodeError:
+            # torn log record: trimmed by recovery semantics
+            self._torn[name] = sig
+            return
+        self._torn.pop(name, None)
+        self._folded.add(name)
+        self._apply_record(rec, evict)
+
+    @staticmethod
+    def _parse_record(text: str):
+        """Decode one log record.  Plain records are a rid -> result dict
+        (the pre-eviction format, still written when nothing is evicted);
+        records carrying evictions are ``{"results": …, "evict": [rids]}``
+        — distinguishable because plain records only have integer keys."""
+        data = json.loads(text)
+        if "results" in data and set(data) <= {"results", "evict"}:
+            return ({int(k): v for k, v in data["results"].items()},
+                    [int(r) for r in data.get("evict", [])])
+        return {int(k): v for k, v in data.items()}, []
+
+    def _apply_record(self, rec: Dict[int, list], evict: Sequence[int]):
+        """Fold one record into the caches and the dedup map: new rids in,
+        evicted rids out — one mixed plan/commit round on the durable
+        map (record order is the linearization order)."""
+        self._results.update(rec)
+        for r in evict:
+            self._results.pop(r, None)
+        self._dedup.update(rec, evict)
 
     def is_committed(self, rids: Sequence[int]) -> np.ndarray:
         """Batched exactly-once probe over the dedup map (bool[len(rids)]).
@@ -120,19 +218,37 @@ class RequestLog:
             os.close(fd)
             return rel
 
-    def commit(self, results: Dict[int, list]) -> None:
-        """Commit a batch of finished requests (one fence for the batch —
-        the batched-map fence elision from core/batched.py) into an
-        atomically claimed slot, so a concurrent RequestLog instance's
-        commit is never overwritten."""
+    def commit(self, results: Dict[int, list],
+               evict: Sequence[int] = ()) -> None:
+        """Commit a batch of finished requests and, in the *same* record
+        and the same mixed plan/commit round on the dedup map, evict
+        expired rids (one fence for the whole batch — the batched-map
+        fence elision from core/batched.py) into an atomically claimed
+        slot, so a concurrent RequestLog instance's commit is never
+        overwritten.  An evicted rid leaves the exactly-once window: its
+        result is dropped from the committed cache and a later request
+        with that rid is served afresh."""
         rel = self._claim_slot()
-        self.io.write(rel, json.dumps(results).encode())
+        rec = {int(k): list(v) for k, v in results.items()}
+        evict = sorted({int(r) for r in evict})
+        if evict:
+            payload = json.dumps({"results": rec, "evict": evict})
+        else:
+            payload = json.dumps(rec)       # legacy-compatible record
+        self.io.write(rel, payload.encode())
         self.io.flush(rel)
         self.io.fence()
         self._folded.add(rel)
-        rec = {int(k): list(v) for k, v in results.items()}
-        self._results.update(rec)
-        self._dedup.add(rec)
+        self._apply_record(rec, evict)
+
+    def expired_rids(self, retain: int) -> List[int]:
+        """Rids past the newest ``retain`` committed ones, in commit
+        order (restart replays records in slot order, so the retention
+        horizon survives recovery)."""
+        done = list(self._results)
+        if retain <= 0:
+            return done
+        return done[:-retain] if len(done) > retain else []
 
     def committed(self) -> Dict[int, list]:
         """All committed results, incrementally maintained: refresh()
@@ -144,13 +260,31 @@ class RequestLog:
         return {k: list(v) for k, v in self._results.items()}
 
 
+def _stack_batch(prompts: List[np.ndarray]) -> np.ndarray:
+    """Stack one equal-length batch of 1-D prompt token arrays.  The
+    length uniformity is asserted, not papered over: a shorter row
+    right-padded into a longer batch would attend over the pad tokens
+    and its generation would change with batch composition — serve()
+    groups requests by prompt length precisely so this never happens."""
+    S = int(prompts[0].shape[0])
+    assert all(int(p.shape[0]) == S for p in prompts), \
+        "serve() must batch equal-length prompts"
+    return np.stack(prompts).astype(np.int32)
+
+
 class ServeEngine:
     def __init__(self, model, params, *, max_len: int, log_dir,
-                 batch_size: int = 4):
+                 batch_size: int = 4, retain: Optional[int] = None):
+        """``retain`` bounds the exactly-once window: when set, each
+        commit also evicts all but the newest ``retain`` committed rids
+        from the durable dedup index — one mixed insert/delete round —
+        so the serving map does not grow without bound under production
+        traffic."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.batch = batch_size
+        self.retain = retain
         self.log = RequestLog(log_dir)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
@@ -179,22 +313,44 @@ class ServeEngine:
 
     def serve(self, requests: Dict[int, np.ndarray], n_new: int = 8,
               *, crash_after_batches: Optional[int] = None) -> Dict[int, list]:
-        """Serve a request dict {rid: prompt tokens[S]}; returns committed
-        results.  Already-committed rids are skipped (exactly-once)."""
+        """Serve a request dict {rid: prompt tokens[S]} and return the
+        committed results for exactly the requested rids.  Ragged prompt
+        lengths are handled by grouping requests into equal-length
+        batches (shortest first, rid order within a group): a causal
+        model's generation for a prompt is then independent of which
+        other requests share its batch — right-padding mixed lengths
+        instead would leak pad tokens into the shorter rows' attention.
+        Already-committed rids are skipped (exactly-once) and answered
+        from the log."""
         self.log.refresh()    # pick up commits from other engine instances
         rids = sorted(requests)
         todo = [rid for rid, done in zip(rids, self.log.is_committed(rids))
                 if not done]
+        groups: Dict[int, List[int]] = {}
+        for rid in todo:
+            groups.setdefault(int(requests[rid].shape[0]), []).append(rid)
+        crashed = False
         batches = 0
-        for i in range(0, len(todo), self.batch):
-            rids = todo[i:i + self.batch]
-            prompts = np.stack([requests[r] for r in rids])
-            gen = self._greedy_batch(prompts, n_new)     # the traversal
-            self.log.commit({int(r): gen[j].tolist()     # the destination
-                             for j, r in enumerate(rids)})
-            batches += 1
-            if crash_after_batches is not None and \
-                    batches >= crash_after_batches:
-                self.log.io.crash(evict="none")
+        for length in sorted(groups):
+            for i in range(0, len(groups[length]), self.batch):
+                batch_rids = groups[length][i:i + self.batch]
+                prompts = _stack_batch([requests[r] for r in batch_rids])
+                gen = self._greedy_batch(prompts, n_new)  # the traversal
+                # never evict a rid this call is serving: its result was
+                # just paid for and belongs in this call's return value
+                expired = ([r for r in self.log.expired_rids(self.retain)
+                            if r not in requests]
+                           if self.retain is not None else ())
+                self.log.commit({int(r): gen[j].tolist()  # the destination
+                                 for j, r in enumerate(batch_rids)},
+                                evict=expired)
+                batches += 1
+                if crash_after_batches is not None and \
+                        batches >= crash_after_batches:
+                    self.log.io.crash(evict="none")
+                    crashed = True
+                    break
+            if crashed:
                 break
-        return self.log.committed()
+        committed = self.log.committed()
+        return {rid: committed[rid] for rid in requests if rid in committed}

@@ -155,6 +155,134 @@ def test_membership_index_out_of_range_keys_fall_back():
         [True, True, True, False, False]
 
 
+def test_update_parallel_matches_mixed_oracle():
+    """The tentpole law: one mixed insert/delete plan/commit round is
+    bit-identical to the sequential mixed oracle — state arrays, per-op
+    ok flags, flush/fence accounting — under duplicate keys with
+    alternating ops and heavy same-bucket conflicts."""
+    rng = np.random.default_rng(3)
+    st_o = B.make_state(4096, NB)
+    st_p = B.make_state(4096, NB)
+    for rnd in range(10):
+        # tiny key range: many duplicate keys per batch, ops alternate
+        ks = jnp.asarray(rng.integers(0, 25, size=64))
+        vs = jnp.asarray(rng.integers(0, 1000, size=64))
+        ops = jnp.asarray(rng.integers(0, 2, size=64))
+        st_o, ok_o = B.apply(st_o, ops, ks, vs, NB)
+        st_p, ok_p, stats = B.update_parallel(st_p, ops, ks, vs, NB)
+        np.testing.assert_array_equal(np.asarray(ok_o), np.asarray(ok_p),
+                                      err_msg=f"round {rnd}")
+        assert_states_equal(st_o, st_p, f"round {rnd}")
+        assert int(stats.coalesced_fences) == 2 * int(stats.max_group)
+    assert int(st_o.fences) == int(st_p.fences)
+    assert int(st_o.flushes) == int(st_p.flushes)
+
+
+def test_mixed_duplicate_alternating_ops_compose():
+    """Duplicate keys with alternating ops inside one batch compose on
+    the {live, dead} liveness state in batch order: insert succeeds iff
+    currently dead/absent, delete iff currently live."""
+    I, D = B.OP_INSERT, B.OP_DELETE
+    # one absent key: ins, ins(dup), del, del(dup), ins, del
+    ops = jnp.asarray([I, I, D, D, I, D])
+    ks = jnp.full(6, 11)
+    vs = jnp.asarray([1, 2, 3, 4, 5, 6])
+    st, ok, stats = B.update_parallel(B.make_state(64, NB), ops, ks, vs, NB)
+    assert list(np.asarray(ok)) == [True, False, True, False, True, True]
+    found, _ = B.lookup(st, jnp.asarray([11]), NB)
+    assert not bool(found[0])                   # last op deleted it
+    assert int(st.cursor) == 2                  # exactly one allocation
+    # seeded live: delete, insert(resurrect), insert(dup)
+    st0, _, _ = B.insert_parallel(B.make_state(64, NB), jnp.asarray([7]),
+                                  jnp.asarray([70]), NB)
+    ops = jnp.asarray([D, I, I])
+    st1, ok, _ = B.update_parallel(st0, ops, jnp.full(3, 7),
+                                   jnp.asarray([0, 71, 72]), NB)
+    assert list(np.asarray(ok)) == [True, True, False]
+    found, vals = B.lookup(st1, jnp.asarray([7]), NB)
+    assert bool(found[0]) and int(vals[0]) == 71
+    assert int(st1.cursor) == int(st0.cursor)   # resurrect, no allocation
+    # oracle agreement on both scenarios
+    st_o, ok_o = B.apply(st0, ops, jnp.full(3, 7),
+                         jnp.asarray([0, 71, 72]), NB)
+    assert_states_equal(st_o, st1, "seeded-live")
+    assert list(np.asarray(ok_o)) == list(np.asarray(ok))
+
+
+def test_mixed_crash_replay_prefix_durability():
+    """Linearization order is batch order for the mixed engine too: a
+    crash after op p durably commits exactly the batch prefix [:p];
+    replaying that prefix through either mixed engine reproduces the
+    recovered state."""
+    rng = np.random.default_rng(5)
+    n = 64
+    ks = jnp.asarray(rng.integers(1, 30, size=n))
+    vs = jnp.asarray(rng.integers(0, 1000, size=n))
+    ops = jnp.asarray(rng.integers(0, 2, size=n))
+    for p in (0, 1, 13, 40, n):
+        replay_scan, _ = B.apply(B.make_state(512, NB), ops[:p], ks[:p],
+                                 vs[:p], NB)
+        replay_par, _, _ = B.update_parallel(B.make_state(512, NB),
+                                             ops[:p], ks[:p], vs[:p], NB)
+        assert_states_equal(replay_scan, replay_par, f"prefix {p}")
+
+
+def test_update_parallel_capacity_failure_kills_group():
+    """A fresh insert that does not fit fails its whole duplicate-key
+    group — exactly what re-running each op against the still-exhausted
+    pool would do — and the oracle agrees."""
+    I, D = B.OP_INSERT, B.OP_DELETE
+    # pool of 3 usable ids; keys 5,6,7 alloc them, key 8's group starves
+    ops = jnp.asarray([I, D, I] * 4)
+    ks = jnp.asarray([5] * 3 + [6] * 3 + [7] * 3 + [8] * 3)
+    vs = jnp.arange(12)
+    st_o, ok_o = B.apply(B.make_state(4, 2), ops, ks, vs, 2)
+    st_p, ok_p, _ = B.update_parallel(B.make_state(4, 2), ops, ks, vs, 2)
+    np.testing.assert_array_equal(np.asarray(ok_o), np.asarray(ok_p))
+    assert_states_equal(st_o, st_p, "exhausted")
+    assert list(np.asarray(ok_p))[9:] == [False] * 3   # whole group failed
+    assert int(st_p.cursor) == 4
+
+
+@pytest.mark.slow
+def test_update_parallel_20k_mixed_oracle_identical():
+    """Acceptance-scale check: a randomized 20k-op mixed batch with
+    duplicate keys is bit-identical between update_parallel and the
+    sequential mixed oracle (state, ok flags, flush/fence accounting)."""
+    rng = np.random.default_rng(11)
+    NB_BIG = 1024
+    n = 20_000
+    st0 = B.make_state(1 << 16, NB_BIG)
+    ks = jnp.asarray(rng.integers(1, 8_000, size=n))   # dup-heavy
+    vs = jnp.asarray(rng.integers(0, 1 << 20, size=n))
+    ops = jnp.asarray(rng.integers(0, 2, size=n))
+    st_o, ok_o = B.apply(st0, ops, ks, vs, NB_BIG)
+    st_p, ok_p, stats = B.update_parallel(st0, ops, ks, vs, NB_BIG)
+    np.testing.assert_array_equal(np.asarray(ok_o), np.asarray(ok_p))
+    assert_states_equal(st_o, st_p, "20k mixed")
+    assert int(stats.coalesced_fences) == 2 * int(stats.max_group)
+
+
+def test_membership_index_mixed_update_and_remove():
+    """The index's mixed round: adds and removes commit in one batch,
+    a removed key re-added resurrects its node (no fresh allocation),
+    and a key named in both sides leaves (remove wins)."""
+    from repro.persistence.index import MembershipIndex
+    idx = MembershipIndex(capacity=64)
+    idx.add(range(10, 20))
+    cursor0 = int(idx.state.cursor)
+    idx.update(add_keys=[20, 21], remove_keys=[10, 11, 20])
+    assert list(idx.contains([10, 11, 20, 21, 12])) == \
+        [False, False, False, True, True]
+    idx.add([10])                            # resurrects the dead node
+    assert bool(idx.contains([10])[0])
+    assert int(idx.state.cursor) == cursor0 + 2   # only 20, 21 allocated
+    # out-of-range keys ride the same mixed round via the side table
+    idx.update(add_keys=[2**40], remove_keys=[2**41])
+    idx.update(remove_keys=[2**40])
+    assert not idx.contains([2**40])[0]
+
+
 def test_plan_phase_does_no_persistence_work():
     """The journey: planning a batch reads no fence/flush state and the
     failed ops of a commit add nothing to the accounting."""

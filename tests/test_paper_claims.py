@@ -11,13 +11,14 @@ from benchmarks.paper_figures import run_workload
 @pytest.fixture(scope="module")
 def list_sweep():
     out = {}
-    for size in (256, 1024, 4096):
+    for size in (256, 4096):   # only sizes the tests probe
         for pol in ("volatile", "izraelevitz", "nvtraverse"):
             out[(size, pol)] = run_workload("list", pol, size=size,
                                             update_pct=20, n_ops=150)
     return out
 
 
+@pytest.mark.slow     # shares the ~25s list_sweep fixture
 def test_nvtraverse_vs_izraelevitz_in_paper_band(list_sweep):
     """Paper §5.2: 13.5×–39.6× over Izraelevitz on lists, growing with
     size (256→8192).  Our cost model must land inside/near that band and
@@ -31,6 +32,7 @@ def test_nvtraverse_vs_izraelevitz_in_paper_band(list_sweep):
     assert r4096 > r256          # the gap grows with traversal length
 
 
+@pytest.mark.slow     # shares the ~25s list_sweep fixture
 def test_volatile_gap_closes_with_size(list_sweep):
     """Paper §5.2: non-durable wins ~2.9× on small lists; the difference
     'becomes less pronounced, and even inverts, as the list grows'."""
@@ -43,6 +45,7 @@ def test_volatile_gap_closes_with_size(list_sweep):
     assert g4096 < g256
 
 
+@pytest.mark.slow     # shares the ~25s list_sweep fixture
 def test_fence_economics_mechanism(list_sweep):
     """The mechanism: NVTraverse fences are O(1)/op, Izraelevitz O(path)."""
     for size in (256, 4096):

@@ -133,6 +133,27 @@ def test_gc_keeps_delta_references_alive(tmp_path):
                                   np.zeros((4,)))     # ref to step1 survives
 
 
+def test_gc_trims_dead_steps_from_live_index(tmp_path):
+    """recover()/gc() keep one live-step MembershipIndex current across
+    passes — dead steps leave by a mixed insert/delete round instead of
+    the index being rebuilt — and the probe matches what is on disk."""
+    mgr = CheckpointManager(tmp_path)
+    # fully-changing trees: no delta references, old steps really die
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"w": jnp.full((4,), float(s))})
+    mgr.recover()
+    assert list(mgr._step_index.contains([1, 2, 3, 4])) == [True] * 4
+    mgr.gc(keep=2)
+    assert list(mgr._step_index.contains([1, 2, 3, 4])) == \
+        [False, False, True, True]
+    assert not (tmp_path / "step_00000001").exists()
+    assert (tmp_path / "step_00000004").exists()
+    # a later pass re-adds nothing and the survivors stay probe-able
+    man = mgr.recover()
+    assert man.step == 4
+    assert list(mgr._step_index.contains([3, 4])) == [True, True]
+
+
 def test_mesh_agnostic_restore(tmp_path):
     """Manifests are layout-free: restore onto a different sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P

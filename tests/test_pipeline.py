@@ -4,6 +4,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -41,6 +43,7 @@ print("PIPE_OK")
 """
 
 
+@pytest.mark.slow     # ~7 min: 4-host-device XLA compile in a subprocess
 def test_gpipe_matches_sequential():
     out = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True,

@@ -136,6 +136,146 @@ def test_request_log_crash_between_claim_and_fence(tmp_path):
     assert bool(log2.is_committed([5])[0])
 
 
+def test_serve_ragged_prompt_lengths(setup, tmp_path):
+    """Mixed-length request dicts must serve (no np.stack crash) via
+    equal-length batch groups, and a request's generation must not
+    depend on which other requests share its batch — no pad-token
+    leakage into shorter rows' attention."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    reqs = {i: rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+            for i, s in enumerate((5, 16, 9, 12, 16, 7))}
+    eng = ServeEngine(model, params, max_len=32, log_dir=tmp_path,
+                      batch_size=4)
+    out = eng.serve(reqs, n_new=4)
+    assert set(out) == set(reqs)
+    assert all(len(v) == 4 for v in out.values())
+    # batch-composition independence: the same prompt served alone (on a
+    # fresh log) yields the identical committed generation
+    solo = ServeEngine(model, params, max_len=32,
+                       log_dir=tmp_path / "solo", batch_size=4)
+    alone = solo.serve({0: reqs[0]}, n_new=4)
+    assert alone[0] == out[0]
+
+
+def test_serve_returns_only_requested_rids(setup, tmp_path):
+    """serve() answers for the rids it was asked, not every historically
+    committed result in the log."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_len=32, log_dir=tmp_path,
+                      batch_size=2)
+    first = _requests(cfg, n=4, seed=1)
+    out1 = eng.serve(first, n_new=3)
+    assert set(out1) == set(first)
+    second = {rid + 100: p for rid, p in _requests(cfg, n=2, seed=2).items()}
+    out2 = eng.serve(second, n_new=3)
+    assert set(out2) == set(second)          # none of `first` leaks through
+    # re-asking for a committed rid answers from the log, scoped the same
+    out3 = eng.serve({0: first[0]}, n_new=3)
+    assert set(out3) == {0} and out3[0] == out1[0]
+
+
+def test_refresh_skips_scan_when_dir_unchanged(tmp_path, monkeypatch):
+    """refresh() must not re-glob the whole log dir when nothing changed:
+    the directory-mtime fast path keeps serve() O(new records)."""
+    import time as _time
+    from repro.serving.engine import RequestLog
+    # shrink the racy window to this filesystem's real granularity so the
+    # test does not sleep out the production network-mount headroom
+    monkeypatch.setattr(RequestLog, "_RACY_NS", 50_000_000)
+    log = RequestLog(tmp_path)
+    log.commit({1: [1]})
+    # step past the racy-timestamp window: a dir mtime younger than one
+    # clock granule never authorizes the fast path
+    _time.sleep(RequestLog._RACY_NS / 1e9 + 0.02)
+    log.refresh()                            # scans once, caches dir mtime
+    other = RequestLog(tmp_path)
+    calls = []
+    orig = RequestLog._scan
+
+    def counting_scan(self):
+        calls.append(1)
+        return orig(self)
+
+    monkeypatch.setattr(RequestLog, "_scan", counting_scan)
+    log.refresh()
+    log.refresh()
+    assert calls == []                       # unchanged dir: no scan
+    other.commit({2: [2]})                   # new record bumps dir mtime
+    log.refresh()
+    assert calls == [1]
+    assert bool(log.is_committed([2])[0])
+
+
+def test_refresh_torn_record_checks_only_torn_not_full_scan(tmp_path,
+                                                            monkeypatch):
+    """A lingering torn record (writer crashed before its fence) must not
+    disable the fast path: an unchanged dir re-stats only the torn names
+    (no full scandir), and the torn record still heals when its content
+    changes — which is invisible to the dir mtime."""
+    import time as _time
+    from repro.serving.engine import RequestLog
+    monkeypatch.setattr(RequestLog, "_RACY_NS", 50_000_000)
+    log = RequestLog(tmp_path)
+    log.commit({1: [1]})
+    p = tmp_path / "log_000001.json"
+    p.write_text('{"9": [1')                 # torn record appears
+    _time.sleep(RequestLog._RACY_NS / 1e9 + 0.02)
+    log.refresh()                            # scans, records torn, caches
+    assert "log_000001.json" in log._torn
+    scans = []
+    monkeypatch.setattr(RequestLog, "_scan",
+                        lambda self: scans.append(1))
+    log.refresh()                            # unchanged dir + stable torn
+    assert scans == []                       # no full scan
+    assert not log.is_committed([9])[0]
+    p.write_text('{"9": [1, 2]}')            # the writer's fence completes
+    log.refresh()                            # dir mtime unchanged: heal
+    assert scans == []                       # ...via the torn-only path
+    assert bool(log.is_committed([9])[0])
+    assert "log_000001.json" not in log._torn
+
+
+def test_request_log_evict_round_and_restart_replay(tmp_path):
+    """A commit's evictions land in the same record and the same mixed
+    plan/commit round: evicted rids leave the exactly-once window, and a
+    restart replaying the log in slot order reaches the same horizon."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({1: [1], 2: [2]})
+    log.commit({3: [3]}, evict=[1])
+    assert list(log.is_committed([1, 2, 3])) == [False, True, True]
+    assert set(log.committed()) == {2, 3}
+    log2 = RequestLog(tmp_path)              # restart: replay incl. evicts
+    assert list(log2.is_committed([1, 2, 3])) == [False, True, True]
+    assert set(log2.committed()) == {2, 3}
+    # an evicted rid is re-servable: committing it again succeeds
+    log2.commit({1: [9]})
+    assert bool(log2.is_committed([1])[0])
+    assert log2.committed()[1] == [9]
+
+
+def test_serve_retention_evicts_old_rids(setup, tmp_path):
+    """retain=N bounds the exactly-once window: rids from *earlier* calls
+    are evicted from the dedup index in the same commit round as new
+    results — but never the rids the current call is serving, whose
+    results were just paid for and are all returned."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_len=32, log_dir=tmp_path,
+                      batch_size=2, retain=2)
+    first = _requests(cfg, n=4, seed=1)
+    out1 = eng.serve(first, n_new=3)
+    assert set(out1) == set(first)           # current call never evicted
+    second = {rid + 100: p for rid, p in _requests(cfg, n=4, seed=2).items()}
+    out2 = eng.serve(second, n_new=3)
+    assert set(out2) == set(second)
+    # the first call's rids fell off the retention horizon
+    assert not eng.log.is_committed(sorted(first)).any()
+    committed = eng.log.committed()
+    assert set(committed) <= set(second)
+    assert len(committed) <= 2 + eng.batch   # horizon: retain + last batch
+
+
 def test_serve_results_match_teacher_forcing(setup, tmp_path):
     """The engine's prefill+decode greedy path agrees with running the
     model once over the full (prompt + generated) sequence."""

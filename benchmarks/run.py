@@ -9,6 +9,42 @@ import argparse
 import sys
 import time
 
+# bench_nvt workload shape, shared with benchmarks/sharded_worker.py so
+# the sharded section always mirrors the single-device mixed section
+NVT_NB = 1024
+NVT_N_OPS = 20_000
+NVT_PREPOP = 10_000
+NVT_MIXED_SEED = 1
+NVT_RATIOS = (0, 20, 50)
+
+
+def nvt_mixed_point(rng, ratio):
+    """One mixed-workload point: updates (inserts with fresh + duplicate
+    keys interleaved with deletes of mostly-present keys), the rest
+    lookups.  The single draw sequence both bench sections consume —
+    callers must draw points in NVT_RATIOS order from a fresh
+    ``default_rng(NVT_MIXED_SEED)`` for the sections to coincide.
+    Returns numpy ``(upd_ops, upd_ks, upd_vs, look_ks)``."""
+    import numpy as np
+    n_upd = NVT_N_OPS * ratio // 100
+    n_look = NVT_N_OPS - n_upd
+    upd_ops = rng.integers(0, 2, size=n_upd).astype(np.int32)
+    upd_ks = rng.integers(1, 2 * NVT_PREPOP, size=n_upd).astype(np.int32)
+    look_ks = rng.integers(1, 2 * NVT_PREPOP, size=n_look).astype(np.int32)
+    return upd_ops, upd_ks, upd_ks * 3, look_ks
+
+
+def _load_report(out_json):
+    """Existing bench report, or {} — a truncated file (e.g. an
+    interrupted earlier run) self-heals instead of wedging every
+    subsequent bench run."""
+    import json
+    from pathlib import Path
+    try:
+        return json.loads(Path(out_json).read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+
 
 def bench_paper_figures(rows, only=None):
     from benchmarks.paper_figures import ALL_FIGURES
@@ -69,7 +105,7 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
     from repro.kernels.nvt_probe.ops import nvt_probe
     from repro.kernels.nvt_probe.ref import tiles_from_keys
 
-    NB, N_OPS = 1024, 20_000
+    NB, N_OPS = NVT_NB, NVT_N_OPS
     st0 = B.make_state(1 << 16, NB)
     ks = jnp.arange(1, N_OPS + 1)
 
@@ -105,25 +141,18 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
     bit_exact = bool(jnp.array_equal(fx, fp) and jnp.array_equal(vx, vp))
 
     # (c) mixed workloads at paper update ratios over a pre-populated map
-    rng_m = np.random.default_rng(1)
-    PREPOP = 10_000
+    rng_m = np.random.default_rng(NVT_MIXED_SEED)
+    PREPOP = NVT_PREPOP
     pre_ks = jnp.arange(1, PREPOP + 1)
     st_pre, _, _ = B.update_parallel(
         st0, jnp.zeros(PREPOP, jnp.int32), pre_ks, pre_ks, NB)
     jax.block_until_ready(st_pre)
     mixed = {}
-    for ratio in (0, 20, 50):
-        n_upd = N_OPS * ratio // 100
-        n_look = N_OPS - n_upd
-        # updates: inserts (fresh + duplicate keys) interleaved with
-        # deletes of (mostly) present keys — alternating ops on dups
-        upd_ops = jnp.asarray(rng_m.integers(0, 2, size=n_upd)
-                              .astype(np.int32))
-        upd_ks = jnp.asarray(rng_m.integers(1, 2 * PREPOP, size=n_upd)
-                             .astype(np.int32))
-        upd_vs = upd_ks * 3
-        look_ks = jnp.asarray(rng_m.integers(1, 2 * PREPOP, size=n_look)
-                              .astype(np.int32))
+    for ratio in NVT_RATIOS:
+        upd_ops, upd_ks, upd_vs, look_ks = map(
+            jnp.asarray, nvt_mixed_point(rng_m, ratio))
+        n_upd = int(upd_ops.shape[0])
+        n_look = int(look_ks.shape[0])
 
         def scan_side():
             st = st_pre
@@ -151,6 +180,9 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
             for f in st_s._fields) and bool(jnp.array_equal(ok_s, ok_m)) \
             and all(bool(jnp.array_equal(a, b))
                     for a, b in zip(look_s, look_m))
+        # chain shape after the round: the baseline future resize/rehash
+        # work compares against (load factor = live keys per bucket)
+        max_chain, mean_chain = B.chain_stats(st_m, NB)
         mixed[str(ratio)] = {
             "update_ratio": ratio,
             "batch_ops": N_OPS,
@@ -162,9 +194,17 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
             "state_identical": ident,
             "coalesced_fences": (int(stats_m.coalesced_fences)
                                  if stats_m is not None else 0),
+            "chain_stats": {
+                "max_chain": int(max_chain),
+                "mean_chain": float(mean_chain),
+                "load_factor": int(st_m.live.sum()) / NB,
+            },
         }
 
-    report = {
+    # merge (don't rewrite): a partial run must not discard sections
+    # other benches own, e.g. the sharded section of --only sharded
+    report = _load_report(out_json)
+    report.update({
         "insert": {
             "batch_ops": N_OPS,
             "n_buckets": NB,
@@ -191,7 +231,7 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
             "pallas_interpret_us_per_query": t_pal / Q * 1e6,
             "bit_exact": bit_exact,
         },
-    }
+    })
     with open(out_json, "w") as f:
         json.dump(report, f, indent=2)
     print(f"# wrote {out_json}", file=sys.stderr)
@@ -211,6 +251,50 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
     rows.append(("nvt,probe_pallas_interpret",
                  report["probe"]["pallas_interpret_us_per_query"],
                  f"bit_exact={bit_exact}"))
+
+
+def bench_nvt_sharded(rows, out_json="BENCH_nvt.json",
+                      device_counts=(1, 2, 4, 8)):
+    """Sharded durable map vs the single-device plan/commit engine on
+    1/2/4/8 forced host devices (same mixed-workload points as the
+    single-device section).  Each device count runs in a subprocess —
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` must land
+    before jax initializes, and this process's jax is already up.
+    Results (state-identity check, per-point timing, chain_stats,
+    persistence-locality counters) merge into ``out_json["sharded"]``.
+    """
+    import json
+    import os
+    import subprocess
+
+    sharded = {}
+    for n_dev in device_counts:
+        print(f"# sharded worker: {n_dev} host devices...",
+              file=sys.stderr)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else "src")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sharded_worker",
+             str(n_dev)],
+            capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            print(proc.stderr, file=sys.stderr)
+            raise RuntimeError(
+                f"sharded worker ({n_dev} devices) failed")
+        sharded[str(n_dev)] = json.loads(proc.stdout)
+    report = _load_report(out_json)
+    report["sharded"] = sharded
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# merged sharded section into {out_json}", file=sys.stderr)
+    for n_dev, res in sharded.items():
+        p = res["points"]["50"]
+        rows.append((f"nvt,sharded_{n_dev}dev_mixed50",
+                     p["sharded_us_per_op"],
+                     f"vs_single={p['single_us_per_op']:.3f}us;"
+                     f"state_identical={res['state_identical']};"
+                     f"max_chain={p['chain_stats']['max_chain']}"))
 
 
 def bench_checkpoint(rows):
@@ -294,7 +378,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
-                         "fig6,hashmap,batched,nvt,ckpt,kernels,roofline")
+                         "fig6,hashmap,batched,nvt,sharded,ckpt,kernels,"
+                         "roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -304,6 +389,8 @@ def main() -> None:
         bench_batched_hashmap(rows)
     if only is None or only & {"nvt", "batched"}:
         bench_nvt(rows)
+    if only is None or "sharded" in only:
+        bench_nvt_sharded(rows)
     if only is None or "ckpt" in only:
         bench_checkpoint(rows)
     if only is None or "kernels" in only:

@@ -1,0 +1,158 @@
+"""Subprocess worker for the sharded bench section of ``bench_nvt``.
+
+Run as ``python -m benchmarks.sharded_worker N_DEV``: forces ``N_DEV``
+host platform devices (the flag must land *before* jax initializes,
+which is why this is a subprocess and not a function of the parent
+bench), replays the same mixed-workload points as the single-device
+``bench_nvt`` section (PR 2: 20k-op batches at 0/20/50%% update ratio
+over a 10k-key pre-populated map, identical seeds), and compares the
+bucket-range-sharded map against the single-device plan/commit engine:
+
+  * state identity: gathered per-key values + liveness, aggregate
+    flush/fence counts, per-op ok flags, and lookup results must all
+    match the single-device engine bit for bit, and the stacked
+    per-bucket flush counters must equal the single-device engine's
+    (same global bucket for every key — the sharded map is a
+    bucket-permutation-equivalent layout, not a re-hash);
+  * persistence locality: ``foreign_ops`` (valid ops a shard received
+    for buckets outside its own range) must be 0 on every shard;
+  * ``chain_stats`` per workload point (max/mean chain length, load
+    factor) as the baseline for future resize/rehash work.
+
+Prints one JSON document on stdout; the parent merges it under
+``BENCH_nvt.json["sharded"][str(N_DEV)]``.
+"""
+import json
+import os
+import re
+import sys
+import time
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1])
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       os.environ.get("XLA_FLAGS", "")).strip()
+    os.environ["XLA_FLAGS"] = (
+        inherited
+        + f" --xla_force_host_platform_device_count={n_dev}").strip()
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import batched as B
+    from repro.core.sharded import ShardedDurableMap, items_of_state
+    from benchmarks.run import (NVT_MIXED_SEED, NVT_N_OPS, NVT_NB,
+                                NVT_PREPOP, NVT_RATIOS, nvt_mixed_point)
+
+    NB, N_OPS, PREPOP = NVT_NB, NVT_N_OPS, NVT_PREPOP
+
+    def timed(fn, reps=3):
+        fn()                                   # compile (excluded)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return out, best
+
+    # single-device reference, pre-populated exactly as bench_nvt does
+    st0 = B.make_state(1 << 16, NB)
+    pre_ks = jnp.arange(1, PREPOP + 1)
+    pre_ops = jnp.zeros(PREPOP, jnp.int32)
+    st_pre, _, _ = B.update_parallel(st0, pre_ops, pre_ks, pre_ks, NB)
+    jax.block_until_ready(st_pre)
+
+    rng_m = np.random.default_rng(NVT_MIXED_SEED)
+    points = {}
+    all_identical = True
+    for ratio in NVT_RATIOS:
+        upd_ops, upd_ks, upd_vs, look_ks = nvt_mixed_point(rng_m, ratio)
+        n_upd = upd_ops.size
+
+        # ---- single-device side ---------------------------------- #
+        def single_side():
+            st = st_pre
+            if n_upd:
+                st, ok, stats = B.update_parallel(
+                    st, jnp.asarray(upd_ops), jnp.asarray(upd_ks),
+                    jnp.asarray(upd_vs), NB)
+            else:
+                ok, stats = jnp.zeros(0, jnp.bool_), None
+            return jax.block_until_ready(
+                (st, ok, B.lookup(st, jnp.asarray(look_ks), NB))), stats
+
+        ((st_s, ok_s, (f_s, v_s)), stats_s), t_single = timed(single_side)
+
+        # ---- sharded side (fresh map per trial, same prepop) ------ #
+        def make_sharded():
+            m = ShardedDurableMap(n_dev, capacity=1 << 16, n_buckets=NB)
+            m.insert(np.asarray(pre_ks, np.int32), np.asarray(pre_ks, np.int32))
+            return m
+
+        m = make_sharded()
+
+        def sharded_side():
+            if n_upd:
+                ok, stats = m.update(upd_ops, upd_ks, upd_vs)
+            else:
+                ok, stats = np.zeros(0, np.bool_), None
+            return (ok, m.lookup(look_ks)), stats
+
+        # timing on a throwaway map (updates mutate); identity checked
+        # on a final fresh run so timing reps don't triple-apply ops
+        sharded_side()                          # compile
+        best = float("inf")
+        for _ in range(3):
+            m = make_sharded()
+            t0 = time.perf_counter()
+            out = sharded_side()
+            best = min(best, time.perf_counter() - t0)
+        t_sharded = best
+        m = make_sharded()
+        (ok_m, (f_m, v_m)), stats_m = sharded_side()
+
+        ident = (
+            bool(np.array_equal(np.asarray(ok_s), ok_m))
+            and bool(np.array_equal(np.asarray(f_s), f_m))
+            and bool(np.array_equal(np.asarray(v_s), v_m))
+            and items_of_state(st_s) == m.items()
+            and int(st_s.flushes) == m.flushes
+            and int(st_s.fences) == m.fences
+        )
+        foreign = (int(np.sum(np.asarray(stats_m.foreign_ops)))
+                   if stats_m is not None else 0)
+        buckets_identical = (
+            bool(np.array_equal(np.asarray(stats_s.bucket_flushes),
+                                np.asarray(stats_m.bucket_flushes)))
+            if stats_m is not None else True)
+        ident = ident and foreign == 0 and buckets_identical
+        all_identical = all_identical and ident
+
+        mx, mean = m.chain_stats()
+        n_live = sum(1 for live, _ in m.items().values() if live)
+        points[str(ratio)] = {
+            "update_ratio": ratio,
+            "batch_ops": N_OPS,
+            "single_us_per_op": t_single / N_OPS * 1e6,
+            "sharded_us_per_op": t_sharded / N_OPS * 1e6,
+            "state_identical": ident,
+            "foreign_ops": foreign,
+            "bucket_flushes_identical": buckets_identical,
+            "coalesced_fences_global": (stats_m.global_coalesced_fences
+                                        if stats_m is not None else 0),
+            "chain_stats": {
+                "max_chain": mx,
+                "mean_chain": mean,
+                "load_factor": n_live / NB,
+            },
+        }
+
+    json.dump({"devices": n_dev,
+               "n_shards": n_dev,
+               "state_identical": all_identical,
+               "points": points}, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

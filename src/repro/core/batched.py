@@ -311,12 +311,19 @@ class CommitStats(NamedTuple):
     node-flushes share a fence and all head-flushes share a second, so
     a batch needs ``2 × max same-bucket group size`` fences regardless
     of batch width.
+
+    ``bucket_flushes`` breaks the flush accounting down per bucket —
+    the instrumentation the sharded layer (core/sharded.py) uses to
+    *prove* persistence locality: a shard's commit may only ever flush
+    buckets inside its own range, so the stacked per-shard arrays must
+    be nonzero only inside each owner range.
     """
     ops_committed: jax.Array      # int32  ops that mutated state
     conflict_groups: jax.Array    # int32  buckets with ≥1 committing op
     max_group: jax.Array          # int32  largest same-bucket group
     coalesced_flushes: jax.Array  # int32  flushes the batch engine issues
     coalesced_fences: jax.Array   # int32  fences  ″  (2 × max_group)
+    bucket_flushes: jax.Array     # int32[n_buckets]  flushes per bucket
 
 
 def _plan(state: HashMapState, ks: jax.Array, n_buckets: int):
@@ -335,24 +342,33 @@ def _commit_stats(bucket: jax.Array, ok: jax.Array, flushes_per_op,
     counts = jnp.zeros(n_buckets, jnp.int32).at[bucket].add(
         ok.astype(jnp.int32))
     max_group = counts.max()
+    flushes = jnp.where(ok, flushes_per_op, 0).astype(jnp.int32)
     return CommitStats(
         ops_committed=ok.sum().astype(jnp.int32),
         conflict_groups=(counts > 0).sum().astype(jnp.int32),
         max_group=max_group,
-        coalesced_flushes=jnp.sum(
-            jnp.where(ok, flushes_per_op, 0)).astype(jnp.int32),
+        coalesced_flushes=flushes.sum(),
         coalesced_fences=(2 * max_group).astype(jnp.int32),
+        bucket_flushes=jnp.zeros(n_buckets, jnp.int32).at[bucket].add(
+            flushes),
     )
 
 
 @partial(jax.jit, static_argnames="n_buckets")
 def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
-                    vs: jax.Array, n_buckets: int):
+                    vs: jax.Array, n_buckets: int, valid=None):
     """Unified mixed-op engine: one plan/commit round over interleaved
     inserts and deletes (``ops[i]`` ∈ {:data:`OP_INSERT`,
     :data:`OP_DELETE`}).  Bit-identical to the sequential mixed oracle
     :func:`apply` (state arrays, per-op ok flags, flush/fence
     accounting); returns ``(state', ok bool[batch], CommitStats)``.
+
+    ``valid`` (optional ``bool[batch]``) marks padding slots: an invalid
+    op always fails (``ok=False``), never allocates, writes, or adds to
+    the accounting, and is *transparent* to the liveness composition of
+    its duplicate-key group — exactly as if the batch had been the valid
+    subset alone.  The sharded layer uses this to keep all-to-all
+    exchange shapes static (per-shard op counts padded to the max).
 
     Conflict resolution is a per-key segment scan over the batch sorted
     stably by key: within a duplicate-key group the liveness state after
@@ -395,15 +411,32 @@ def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
     s_node = node[order]
     s_exists = snap_exists[order]
     first = jnp.concatenate([jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]])
-    prev_live = jnp.where(
-        first, snap_live[order],
-        jnp.concatenate([jnp.zeros((1,), jnp.bool_), s_ins[:-1]]))
-    s_ok = s_ins ^ prev_live    # insert iff dead/absent, delete iff live
-    s_okins = s_ok & s_ins
 
     # segment machinery: segment id + scatter-min/max over segments
     seg = jnp.cumsum(first.astype(jnp.int32)) - 1
     pos = jnp.arange(n, dtype=jnp.int32)
+
+    if valid is None:
+        prev_live = jnp.where(
+            first, snap_live[order],
+            jnp.concatenate([jnp.zeros((1,), jnp.bool_), s_ins[:-1]]))
+        s_ok = s_ins ^ prev_live    # insert iff dead/absent, delete iff live
+    else:
+        # padding-transparent composition: liveness after any *valid* op
+        # is that op's code, and invalid ops leave it untouched, so an
+        # op's predecessor state is the code of the latest valid op
+        # before it in its segment (the snapshot seed when there is
+        # none).  A cummax over valid positions finds that predecessor
+        # without assuming pads sort after real ops within a group.
+        s_valid = valid[order]
+        lastv = jax.lax.cummax(jnp.where(s_valid, pos, -1))
+        prev_j = jnp.concatenate([jnp.full((1,), -1, jnp.int32),
+                                  lastv[:-1]])
+        pj = jnp.clip(prev_j, 0, n - 1)
+        in_seg = (prev_j >= 0) & (seg[pj] == seg)
+        prev_live = jnp.where(in_seg, s_ins[pj], snap_live[order])
+        s_ok = (s_ins ^ prev_live) & s_valid
+    s_okins = s_ok & s_ins
 
     # the allocator of an absent-key group is its first successful insert
     first_okins = jnp.full(n, n, jnp.int32).at[seg].min(

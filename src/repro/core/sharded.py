@@ -1,0 +1,366 @@
+"""Sharded durable map: bucket-range partitioning of the plan/commit engine.
+
+The NVTraverse split is naturally shard-local.  The *plan* phase (the
+journey) is embarrassingly parallel — it reads a snapshot and does zero
+persistence work — and the *commit* phase (the destination) only ever
+touches one bucket chain, so partitioning the node pool and the bucket
+heads by **bucket range** keeps every flush and fence inside the shard
+that owns the bucket.  Nothing crosses a shard boundary at commit time;
+recovery is per-shard independent.
+
+Layout (``ShardedState``): the single-device :class:`HashMapState` gains
+a leading shard axis.  Shard ``s`` of ``S`` owns global buckets
+``[s·nb_local, (s+1)·nb_local)`` where ``nb_local = n_buckets / S``, and
+a private node pool with its own bump cursor.  Because ``nb_local``
+divides ``n_buckets``, the local bucket of a key equals its global
+bucket mod ``nb_local`` — the unmodified single-device engine
+(:func:`repro.core.batched.update_parallel` with ``n_buckets=nb_local``)
+places every key in the *same global bucket* it would occupy unsharded,
+so the gathered sharded map is a bucket-permutation-equivalent of the
+single-device map (identical per-key values and liveness; node ids
+differ only by per-shard allocation order).
+
+Routing: ops enter data-parallel (each shard holds a contiguous slice of
+the batch), are grouped by owner shard (``owner = global_bucket //
+nb_local``) with a stable sort so batch order survives inside each
+group, and are exchanged with one ``all_to_all`` whose per-(src, dst)
+block is padded to the slice length — static shapes, no host round-trip.
+The flattened receive buffer is src-major, i.e. *global batch order*, so
+each shard's local plan/commit round composes duplicate-key ops exactly
+as the single-device engine would; padding slots ride along as
+``valid=False`` ops, which the engine treats as fully transparent.
+
+Accounting: per-shard ``CommitStats`` come back stacked
+(:class:`ShardCommitStats`) so the O(1)-flushes / 2-fences-per-update
+law still holds globally — per-op flush/fence sums equal the
+single-device engine's bit for bit, and the coalesced batch cost is
+``2 × max over shards of the largest same-bucket conflict group``
+(shards fence concurrently).  ``bucket_flushes`` is the locality proof:
+stacked to a global array it must be nonzero only inside each shard's
+own range, and ``foreign_ops`` counts ops a shard received for buckets
+outside its range (always 0 unless routing is broken).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import batched
+
+AXIS = "shards"
+
+
+class ShardedState(NamedTuple):
+    """:class:`~repro.core.batched.HashMapState` with a leading shard
+    axis; row ``s`` is shard ``s``'s private node pool + bucket heads."""
+    key: jax.Array          # int32[S, cap_local]
+    val: jax.Array          # int32[S, cap_local]
+    nxt: jax.Array          # int32[S, cap_local]
+    live: jax.Array         # bool[S, cap_local]
+    head: jax.Array         # int32[S, nb_local]
+    cursor: jax.Array       # int32[S]  per-shard bump allocator
+    flushes: jax.Array      # int32[S]  per-shard persistence accounting
+    fences: jax.Array       # int32[S]
+
+
+class ShardCommitStats(NamedTuple):
+    """Per-shard :class:`~repro.core.batched.CommitStats`, stacked.
+
+    All fields except ``bucket_flushes`` are ``int32[S]`` (one entry per
+    shard); ``bucket_flushes`` is the global ``int32[n_buckets]`` array
+    (shard rows concatenated in bucket-range order, so index ``b`` *is*
+    global bucket ``b``).  ``foreign_ops[s]`` counts valid ops shard
+    ``s`` received whose global bucket is outside its own range — the
+    routing invariant says it is always 0.
+    """
+    ops_committed: jax.Array
+    conflict_groups: jax.Array
+    max_group: jax.Array
+    coalesced_flushes: jax.Array
+    coalesced_fences: jax.Array
+    foreign_ops: jax.Array
+    bucket_flushes: jax.Array
+
+    @property
+    def total_ops_committed(self) -> int:
+        return int(jnp.sum(self.ops_committed))
+
+    @property
+    def total_coalesced_flushes(self) -> int:
+        return int(jnp.sum(self.coalesced_flushes))
+
+    @property
+    def global_coalesced_fences(self) -> int:
+        """Shards commit concurrently, so their fences overlap: the batch
+        needs ``2 × (largest same-bucket group on any shard)`` fences."""
+        return int(jnp.max(self.coalesced_fences))
+
+
+def _state_specs() -> ShardedState:
+    two = P(AXIS, None)
+    one = P(AXIS)
+    return ShardedState(key=two, val=two, nxt=two, live=two, head=two,
+                        cursor=one, flushes=one, fences=one)
+
+
+def items_of_state(state: batched.HashMapState) -> dict:
+    """``{key: (live, val)}`` over every allocated node of a
+    single-device map — the engine allocates at most one node per key,
+    so this is the map's abstract content (dead nodes included)."""
+    st = jax.device_get(state)
+    c = int(st.cursor)
+    return {int(k): (bool(l), int(v))
+            for k, l, v in zip(st.key[1:c], st.live[1:c], st.val[1:c])}
+
+
+# --------------------------------------------------------------------- #
+# shard-local bodies, compiled once per (mesh, n_shards, n_buckets)      #
+# --------------------------------------------------------------------- #
+def _route(owner: jax.Array, valid: jax.Array, S: int):
+    """Send-buffer layout for one all-to-all: group this shard's ops by
+    owner (stable sort, so batch order survives within each group) and
+    place group ``d`` at block ``d`` of a ``[S, L0]`` buffer."""
+    L0 = owner.shape[0]
+    owner = jnp.where(valid, owner, 0)           # pads ride to shard 0
+    sort_idx = jnp.argsort(owner)                # stable: ties keep order
+    so = owner[sort_idx]
+    counts = jnp.zeros(S, jnp.int32).at[owner].add(1)
+    starts = jnp.cumsum(counts) - counts
+    flat = so * L0 + (jnp.arange(L0, dtype=jnp.int32) - starts[so])
+    return sort_idx, flat
+
+
+def _a2a(x: jax.Array, S: int) -> jax.Array:
+    """Exchange a ``[S·L0]`` or ``[S·L0, W]`` dest-major buffer; the
+    result, flattened src-major, is this shard's slice of the batch in
+    global order (block ``d`` of ``S·L0`` rows goes to shard ``d``)."""
+    shp = x.shape
+    return jax.lax.all_to_all(
+        x.reshape(S, -1), AXIS, 0, 0, tiled=True).reshape(shp)
+
+
+def _send_packed(fields, sort_idx, flat, S: int):
+    """Route a whole op payload with ONE all_to_all: the fields stack as
+    int32 columns of a ``[S·L0, W]`` buffer (one collective per commit
+    round instead of one per field — the latency floor of a real
+    multi-device deployment is per-collective, not per-byte)."""
+    cols = jnp.stack([f.astype(jnp.int32) for f in fields], axis=1)
+    buf = jnp.zeros((cols.shape[0] * S, cols.shape[1]), jnp.int32)
+    recv = _a2a(buf.at[flat].set(cols[sort_idx]), S)
+    return [recv[:, i] for i in range(len(fields))]
+
+
+def _squeeze(state: ShardedState) -> batched.HashMapState:
+    return batched.HashMapState(*(f[0] for f in state))
+
+
+@lru_cache(maxsize=None)
+def _build_fns(mesh, S: int, n_buckets: int):
+    """The jitted shard_map update/lookup closures for one map config —
+    cached so every :class:`ShardedDurableMap` instance with the same
+    (mesh, shards, buckets) shares compiles."""
+    nb_local = n_buckets // S
+
+    def update_local(state, ops, ks, vs, valid):
+        me = jax.lax.axis_index(AXIS)
+        st = _squeeze(state)
+        owner = batched.bucket_of(ks, n_buckets) // nb_local
+        sort_idx, flat = _route(owner, valid, S)
+        r_ops, r_ks, r_vs, r_valid_i = _send_packed(
+            [ops, ks, vs, valid], sort_idx, flat, S)
+        r_valid = r_valid_i.astype(jnp.bool_)
+        # routing invariant instrumentation: a shard must never be asked
+        # to commit (flush/fence) a bucket outside its own range
+        g = batched.bucket_of(r_ks, n_buckets)
+        foreign = jnp.sum(
+            r_valid & ((g // nb_local) != me)).astype(jnp.int32)
+        st2, ok_r, stats = batched.update_parallel(
+            st, r_ops, r_ks, r_vs, nb_local, valid=r_valid)
+        # hand each op's result back to the shard that holds its slot
+        ok = jnp.zeros(ops.shape[0], jnp.bool_).at[sort_idx].set(
+            _a2a(ok_r, S)[flat])
+        sstats = ShardCommitStats(
+            ops_committed=stats.ops_committed[None],
+            conflict_groups=stats.conflict_groups[None],
+            max_group=stats.max_group[None],
+            coalesced_flushes=stats.coalesced_flushes[None],
+            coalesced_fences=stats.coalesced_fences[None],
+            foreign_ops=foreign[None],
+            bucket_flushes=stats.bucket_flushes,
+        )
+        return ShardedState(*(f[None] for f in st2)), ok, sstats
+
+    def lookup_local(state, ks, valid):
+        st = _squeeze(state)
+        owner = batched.bucket_of(ks, n_buckets) // nb_local
+        sort_idx, flat = _route(owner, valid, S)
+        r_ks, = _send_packed([ks], sort_idx, flat, S)
+        r_found, r_vals = batched.lookup(st, r_ks, nb_local)
+        # one packed collective for the answers too
+        back = _a2a(jnp.stack([r_found.astype(jnp.int32), r_vals],
+                              axis=1), S)[flat]
+        n = ks.shape[0]
+        found = jnp.zeros(n, jnp.bool_).at[sort_idx].set(
+            back[:, 0].astype(jnp.bool_))
+        vals = jnp.zeros(n, jnp.int32).at[sort_idx].set(back[:, 1])
+        return found, vals
+
+    sspec = _state_specs()
+    ospec = ShardCommitStats(*([P(AXIS)] * 7))
+    # check_rep=False: the chain-walk while_loop has no replication rule
+    # in jax 0.4.37; every output here is explicitly sharded anyway.
+    update_fn = jax.jit(shard_map(
+        update_local, mesh=mesh,
+        in_specs=(sspec, P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(sspec, P(AXIS), ospec), check_rep=False))
+    lookup_fn = jax.jit(shard_map(
+        lookup_local, mesh=mesh,
+        in_specs=(sspec, P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS)), check_rep=False))
+    return update_fn, lookup_fn
+
+
+class ShardedDurableMap:
+    """Bucket-range-sharded durable map running the plan/commit engine
+    per shard under ``shard_map``.
+
+    ``capacity`` is the *total* node budget (split evenly; each shard
+    reserves its own null node 0, so the usable total is
+    ``S·(ceil(capacity/S) - 1)``).  ``n_buckets`` must be divisible by
+    the shard count.  Requires ``n_shards`` jax devices — force host
+    devices for CPU work with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+
+    def __init__(self, n_shards: Optional[int] = None, *,
+                 capacity: int = 1 << 16, n_buckets: int = 1024,
+                 mesh=None):
+        if mesh is None:
+            from ..launch.mesh import make_map_mesh
+            mesh = make_map_mesh(n_shards or jax.device_count())
+        self.mesh = mesh
+        self.n_shards = int(np.prod(list(mesh.shape.values())))
+        if n_shards is not None and n_shards != self.n_shards:
+            raise ValueError(
+                f"n_shards={n_shards} does not match the given mesh "
+                f"({self.n_shards} devices); pass one or the other")
+        if n_buckets % self.n_shards:
+            raise ValueError(
+                f"n_buckets={n_buckets} not divisible by "
+                f"n_shards={self.n_shards}")
+        self.n_buckets = n_buckets
+        self.nb_local = n_buckets // self.n_shards
+        self.cap_local = -(-capacity // self.n_shards)
+        S, C, NBL = self.n_shards, self.cap_local, self.nb_local
+        state = ShardedState(
+            key=jnp.zeros((S, C), jnp.int32),
+            val=jnp.zeros((S, C), jnp.int32),
+            nxt=jnp.zeros((S, C), jnp.int32),
+            live=jnp.zeros((S, C), jnp.bool_),
+            head=jnp.zeros((S, NBL), jnp.int32),
+            cursor=jnp.ones(S, jnp.int32),
+            flushes=jnp.zeros(S, jnp.int32),
+            fences=jnp.zeros(S, jnp.int32),
+        )
+        self.state = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(
+                mesh, P(AXIS, *([None] * (x.ndim - 1))))), state)
+        self._update_fn, self._lookup_fn = _build_fns(mesh, S, n_buckets)
+
+    # ---------------- host API --------------------------------------- #
+    def _pad(self, *arrs: np.ndarray):
+        """Pad the batch so each shard's slice is the same power-of-two
+        length (static all-to-all shapes, retraces capped at one per
+        log2 size); pad slots are ``valid=False`` and fully transparent
+        to the engine."""
+        n = arrs[0].shape[0]
+        per = -(-max(n, 1) // self.n_shards)
+        per = 1 << (per - 1).bit_length()
+        total = per * self.n_shards
+        out = [jnp.asarray(np.concatenate(
+            [a, np.zeros(total - n, a.dtype)])) for a in arrs]
+        valid = jnp.asarray(np.arange(total) < n)
+        return out, valid
+
+    def update(self, ops, ks, vs) -> Tuple[np.ndarray, ShardCommitStats]:
+        """One mixed plan/commit round over the whole map: route each op
+        to its owner shard, commit per shard, return per-op ``ok`` in
+        batch order plus the stacked per-shard stats."""
+        ops = np.asarray(ops, np.int32)
+        ks = np.asarray(ks, np.int32)
+        vs = np.asarray(vs, np.int32)
+        n = ks.shape[0]
+        if n == 0:
+            return np.zeros(0, np.bool_), None
+        (ops_p, ks_p, vs_p), valid = self._pad(ops, ks, vs)
+        self.state, ok, stats = self._update_fn(
+            self.state, ops_p, ks_p, vs_p, valid)
+        return np.asarray(ok)[:n], stats
+
+    def insert(self, ks, vs):
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, batched.OP_INSERT, np.int32),
+                           ks, vs)
+
+    def delete(self, ks):
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, batched.OP_DELETE, np.int32),
+                           ks, np.zeros_like(ks))
+
+    def lookup(self, ks) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched lookup (the journey — no persistence work on any
+        shard): returns ``(found bool[n], vals int32[n])``."""
+        ks = np.asarray(ks, np.int32)
+        n = ks.shape[0]
+        if n == 0:
+            return np.zeros(0, np.bool_), np.zeros(0, np.int32)
+        (ks_p,), valid = self._pad(ks)
+        found, vals = self._lookup_fn(self.state, ks_p, valid)
+        return np.asarray(found)[:n], np.asarray(vals)[:n]
+
+    def items(self) -> dict:
+        """Gathered abstract content ``{key: (live, val)}`` — the
+        bucket-permutation-invariant view used by the state-identity
+        checks against the single-device engine.  Keys are disjoint
+        across shards (bucket ranges partition the hash space), so the
+        union over per-shard views is exact."""
+        st = jax.device_get(self.state)
+        out = {}
+        for s in range(self.n_shards):
+            out.update(items_of_state(
+                batched.HashMapState(*(f[s] for f in st))))
+        return out
+
+    @property
+    def flushes(self) -> int:
+        """Aggregate per-op flush accounting (sums the per-shard
+        counters; equals the single-device engine's on the same ops)."""
+        return int(np.sum(jax.device_get(self.state.flushes)))
+
+    @property
+    def fences(self) -> int:
+        return int(np.sum(jax.device_get(self.state.fences)))
+
+    @property
+    def cursor_max(self) -> int:
+        """Fullest shard's bump cursor — the growth trigger (a batch of
+        fresh inserts could in the worst case all hash to one shard)."""
+        return int(np.max(jax.device_get(self.state.cursor)))
+
+    def chain_stats(self) -> Tuple[int, float]:
+        """Global (max, mean) chain length over all shards' buckets."""
+        st = jax.device_get(self.state)
+        mxs, means = [], []
+        for s in range(self.n_shards):
+            local = batched.HashMapState(*(f[s] for f in st))
+            mx, mean = batched.chain_stats(
+                jax.tree_util.tree_map(jnp.asarray, local), self.nb_local)
+            mxs.append(int(mx))
+            means.append(float(mean))
+        return max(mxs), float(np.mean(means))

@@ -21,6 +21,15 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_map_mesh(n_shards: int):
+    """1-D mesh for the sharded durable map (core/sharded.py): the map's
+    bucket ranges partition along the single ``"shards"`` axis.  Requires
+    ``n_shards`` devices (force host devices for CPU testing with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes)."""
+    return jax.make_mesh((n_shards,), ("shards",))
+
+
 # TPU v5e hardware constants (roofline terms, EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -10,6 +10,11 @@ one mixed ``update_parallel`` batch keeps the index current (new live
 steps enter, dead steps leave — one commit round), one ``vmap``'d
 :func:`repro.core.batched.lookup` batch classifies every step dir (the
 journey — zero persistence work).
+
+The map behind the index is pluggable: the default is the single-device
+engine; ``n_shards`` switches to the bucket-range-sharded
+:class:`repro.core.sharded.ShardedDurableMap` (same add/remove/update
+API, commits stay per-shard-local) for multi-device deployments.
 """
 from __future__ import annotations
 
@@ -26,6 +31,83 @@ N_BUCKETS = 128
 def owner_step(rel: str) -> int:
     """Owner step of a manifest-referenced file path (``step_XXXXXXXX/…``)."""
     return int(rel.split("/", 1)[0].split("_")[1])
+
+
+def _pad_pow2(xs: np.ndarray) -> np.ndarray:
+    """Pad a batch to the next power of two with duplicates of its
+    *last* element, capping jit retraces at one per (log2 size,
+    capacity) instead of one per distinct batch length.  A duplicate
+    of the batch's last op never commits — after an insert the key is
+    live (a repeat insert fails), after a delete it is dead (a repeat
+    delete fails) — so padding is invisible to the map.  Duplicating
+    the *first* op would not be safe in a mixed batch: an insert
+    replayed after a later delete of the same key would resurrect
+    it."""
+    n = max(1, 1 << (xs.size - 1).bit_length())
+    return np.concatenate([xs, np.full(n - xs.size, xs[-1], xs.dtype)])
+
+
+class _SingleBackend:
+    """The single-device plan/commit engine behind the index."""
+
+    def __init__(self, capacity: int, n_buckets: int):
+        self.capacity = capacity
+        self.n_buckets = n_buckets
+        self.state = batched.make_state(capacity, n_buckets)
+
+    def fits(self, n_fresh: int) -> bool:
+        # cursor counts pool slots already allocated (+1 for null); the
+        # worst case allocates one fresh node per insert.  Removed keys
+        # keep their (dead) nodes until a rebuild, so cursor — not the
+        # member count — is the right fullness measure.
+        return int(self.state.cursor) + n_fresh <= self.capacity
+
+    def update(self, ops: np.ndarray, ks: np.ndarray):
+        pk = jnp.asarray(_pad_pow2(ks))
+        self.state, ok, stats = batched.update_parallel(
+            self.state, jnp.asarray(_pad_pow2(ops)), pk, pk,
+            self.n_buckets)
+        return np.asarray(ok)[:ks.size], stats
+
+    def insert(self, ks: np.ndarray) -> np.ndarray:
+        pk = jnp.asarray(_pad_pow2(ks))
+        self.state, ok, _ = batched.insert_parallel(
+            self.state, pk, pk, self.n_buckets)
+        return np.asarray(ok)[:ks.size]
+
+    def lookup(self, ks: np.ndarray) -> np.ndarray:
+        found, _ = batched.lookup(
+            self.state, jnp.asarray(_pad_pow2(ks)), self.n_buckets)
+        return np.asarray(found)[:ks.size]
+
+
+class _ShardedBackend:
+    """Bucket-range-sharded map behind the index (multi-device)."""
+
+    def __init__(self, capacity: int, n_buckets: int, n_shards: int,
+                 mesh=None):
+        from ..core.sharded import ShardedDurableMap
+        self.map = ShardedDurableMap(
+            n_shards, capacity=capacity, n_buckets=n_buckets, mesh=mesh)
+
+    @property
+    def state(self):
+        return self.map.state
+
+    def fits(self, n_fresh: int) -> bool:
+        # conservative: a batch's fresh inserts could in the worst case
+        # all hash into the fullest shard's bucket range
+        return self.map.cursor_max + n_fresh <= self.map.cap_local
+
+    def update(self, ops: np.ndarray, ks: np.ndarray):
+        return self.map.update(ops, ks, ks)
+
+    def insert(self, ks: np.ndarray) -> np.ndarray:
+        return self.map.insert(ks, ks)[0]
+
+    def lookup(self, ks: np.ndarray) -> np.ndarray:
+        found, _ = self.map.lookup(ks)
+        return found
 
 
 class MembershipIndex:
@@ -45,33 +127,39 @@ class MembershipIndex:
     cleanly on exhaustion rather than corrupting chains, but an index
     must never drop members, so growth happens *before* the commit
     (dead nodes are dropped by the rebuild, which re-inserts only the
-    live member set)."""
+    live member set).
 
-    def __init__(self, capacity: int = 4096, n_buckets: int = N_BUCKETS):
+    ``n_shards`` (optional) runs the map bucket-range-sharded across
+    that many devices (:class:`repro.core.sharded.ShardedDurableMap`)
+    with the identical public API; ``mesh`` overrides the auto-built
+    1-D shard mesh."""
+
+    def __init__(self, capacity: int = 4096, n_buckets: int = N_BUCKETS,
+                 n_shards: Optional[int] = None, mesh=None):
         self.n_buckets = n_buckets
         self.capacity = capacity
-        self.state = batched.make_state(capacity, n_buckets)
+        self.n_shards = n_shards
+        self._mesh = mesh
+        self._backend = self._make_backend(capacity)
         self._members: set = set()               # live in-range members
         self._oob: set = set()     # members outside the int32 key space
         self.last_stats = None
 
+    def _make_backend(self, capacity: int):
+        if self.n_shards is None:
+            return _SingleBackend(capacity, self.n_buckets)
+        return _ShardedBackend(capacity, self.n_buckets, self.n_shards,
+                               self._mesh)
+
+    @property
+    def state(self):
+        """The backing map state (single-device ``HashMapState`` or the
+        sharded ``ShardedState``)."""
+        return self._backend.state
+
     @staticmethod
     def _in_range(k: int) -> bool:
         return 0 <= k < 2**31 - 1
-
-    @staticmethod
-    def _pad_pow2(xs: np.ndarray) -> np.ndarray:
-        """Pad a batch to the next power of two with duplicates of its
-        *last* element, capping jit retraces at one per (log2 size,
-        capacity) instead of one per distinct batch length.  A duplicate
-        of the batch's last op never commits — after an insert the key is
-        live (a repeat insert fails), after a delete it is dead (a repeat
-        delete fails) — so padding is invisible to the map.  Duplicating
-        the *first* op would not be safe in a mixed batch: an insert
-        replayed after a later delete of the same key would resurrect
-        it."""
-        n = max(1, 1 << (xs.size - 1).bit_length())
-        return np.concatenate([xs, np.full(n - xs.size, xs[-1], xs.dtype)])
 
     @property
     def members(self) -> set:
@@ -99,29 +187,35 @@ class MembershipIndex:
         dels = np.asarray(sorted(del_set), np.int32)
         if ins.size + dels.size == 0:
             return
-        # cursor counts pool slots already allocated (+1 for null); the
-        # worst case allocates one fresh node per insert.  Removed keys
-        # keep their (dead) nodes until a rebuild, so cursor — not the
-        # member count — is the right fullness measure.
-        if int(self.state.cursor) + ins.size > self.capacity:
+        if not self._backend.fits(ins.size):
+            # rebuild, *checked*: growth capacity is sized by what the
+            # backend actually holds, not the global member count — a
+            # skewed key distribution can overflow one shard of the
+            # sharded backend long before the global total does, so grow
+            # until the live set re-inserts cleanly AND the worst-case
+            # batch (every fresh insert hashing into the fullest shard)
+            # still fits.  Each retry costs one rebuild; growth doubles,
+            # so the loop is O(log) and amortized away.
             live = np.asarray(sorted(self._members), np.int32)
             while 1 + live.size + ins.size > self.capacity:
+                self.capacity *= 2      # can't fit even unskewed: jump
+            while True:
+                cand = self._make_backend(self.capacity)
+                rebuilt = (bool(cand.insert(live + 1).all())
+                           if live.size else True)
+                if rebuilt and cand.fits(ins.size):
+                    self._backend = cand
+                    break
                 self.capacity *= 2
-            self.state = batched.make_state(self.capacity, self.n_buckets)
-            if live.size:
-                old = jnp.asarray(self._pad_pow2(live) + 1)
-                self.state, _, _ = batched.insert_parallel(
-                    self.state, old, old, self.n_buckets)
-        n_ops = ins.size + dels.size
-        ks = np.concatenate([ins, dels])
+        ks = np.concatenate([ins, dels]) + 1
         ops = np.concatenate([
             np.full(ins.size, batched.OP_INSERT, np.int32),
             np.full(dels.size, batched.OP_DELETE, np.int32)])
-        pk = jnp.asarray(self._pad_pow2(ks) + 1)
-        self.state, ok, self.last_stats = batched.update_parallel(
-            self.state, jnp.asarray(self._pad_pow2(ops)), pk, pk,
-            self.n_buckets)
-        okh = np.asarray(ok)[:n_ops]
+        okh, self.last_stats = self._backend.update(ops, ks)
+        # an index never drops members: every planned insert is a
+        # non-member (dedup above) and growth ran before the commit, so
+        # a failed insert here can only mean the growth math is wrong
+        assert okh[:ins.size].all(), "membership insert dropped"
         self._members.update(int(k) for k in ins[okh[:ins.size]])
         self._members.difference_update(
             int(k) for k in dels[okh[ins.size:]])
@@ -142,10 +236,7 @@ class MembershipIndex:
         if in_range:
             pos, ks = zip(*in_range)
             ks = np.asarray(ks, np.int32)
-            found, _ = batched.lookup(
-                self.state, jnp.asarray(self._pad_pow2(ks) + 1),
-                self.n_buckets)
-            out[list(pos)] = np.asarray(found)[:ks.size]
+            out[list(pos)] = self._backend.lookup(ks + 1)
         for i, k in enumerate(keys):
             if not self._in_range(k):
                 out[i] = k in self._oob

@@ -43,9 +43,16 @@ class RequestLog:
     # authorizes the refresh() fast path
     _RACY_NS = 2_000_000_000
 
-    def __init__(self, root, seed: int = 0, capacity: int = 1 << 15):
+    def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
+                 shards: Optional[int] = None):
+        """``shards`` (optional) backs the dedup index with the
+        bucket-range-sharded durable map
+        (:class:`repro.core.sharded.ShardedDurableMap`) across that many
+        devices — same exactly-once semantics, commits stay
+        per-shard-local."""
         self.io = StagedIO(Path(root), seed=seed)
-        self._dedup = MembershipIndex(capacity, n_buckets=256)
+        self._dedup = MembershipIndex(capacity, n_buckets=256,
+                                      n_shards=shards)
         self._folded: set = set()  # log filenames already in the index
         self._torn: dict = {}      # torn filename -> (size, mtime_ns) seen
         self._results: Dict[int, list] = {}   # rid -> committed result
@@ -274,18 +281,20 @@ def _stack_batch(prompts: List[np.ndarray]) -> np.ndarray:
 
 class ServeEngine:
     def __init__(self, model, params, *, max_len: int, log_dir,
-                 batch_size: int = 4, retain: Optional[int] = None):
+                 batch_size: int = 4, retain: Optional[int] = None,
+                 log_shards: Optional[int] = None):
         """``retain`` bounds the exactly-once window: when set, each
         commit also evicts all but the newest ``retain`` committed rids
         from the durable dedup index — one mixed insert/delete round —
         so the serving map does not grow without bound under production
-        traffic."""
+        traffic.  ``log_shards`` opts the request-log dedup map into the
+        bucket-range-sharded backend (multi-device deployments)."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.batch = batch_size
         self.retain = retain
-        self.log = RequestLog(log_dir)
+        self.log = RequestLog(log_dir, shards=log_shards)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)

@@ -106,6 +106,72 @@ def test_chain_stats():
     assert int(mx) >= int(mean)
 
 
+def test_chain_stats_exact_counts_and_dead_nodes():
+    """chain_stats counts *nodes in chains*, exactly: the mean over all
+    buckets is total allocated nodes / n_buckets, the max matches a
+    per-bucket histogram of the hash — and logical deletes do not
+    shorten any chain (dead nodes stay linked until a rebuild)."""
+    nb = 8
+    st = B.make_state(256, nb)
+    assert (int(B.chain_stats(st, nb)[0]),
+            float(B.chain_stats(st, nb)[1])) == (0, 0.0)
+    ks = jnp.arange(1, 41)
+    st, _ = B.insert(st, ks, ks, nb)
+    counts = np.zeros(nb, np.int64)
+    for k in np.asarray(ks):
+        counts[int(B.bucket_of(jnp.int32(k), nb))] += 1
+    mx, mean = B.chain_stats(st, nb)
+    assert int(mx) == counts.max()
+    assert float(mean) == pytest.approx(40 / nb)
+    # duplicate inserts and deletes never relink: chain shape unchanged
+    st2, _ = B.delete(st, ks[:17], nb)
+    st2, _ = B.insert(st2, ks[:5], ks[:5] * 9, nb)   # resurrect in place
+    mx2, mean2 = B.chain_stats(st2, nb)
+    assert (int(mx2), float(mean2)) == (int(mx), float(mean))
+
+
+def test_lookup_deleted_then_resurrected_keys():
+    """Direct coverage for the lookup path over every liveness phase of
+    a key: live → found, logically deleted → not found (the dead node
+    still sits mid-chain and must not satisfy or derail the walk),
+    resurrected → found with the *new* value — on both engines."""
+    nb = 4                                     # long chains: dead nodes
+    ks = jnp.arange(1, 33)                     # sit mid-walk for later keys
+    for kind in ("scan", "parallel"):
+        st = B.make_state(256, nb)
+        if kind == "scan":
+            st, _ = B.insert(st, ks, ks * 2, nb)
+            st, _ = B.delete(st, ks[::2], nb)
+        else:
+            st, _, _ = B.insert_parallel(st, ks, ks * 2, nb)
+            st, _, _ = B.delete_parallel(st, ks[::2], nb)
+        found, vals = B.lookup(st, ks, nb)
+        np.testing.assert_array_equal(
+            np.asarray(found), np.arange(32) % 2 == 1)
+        np.testing.assert_array_equal(
+            np.asarray(vals)[1::2], np.asarray(ks)[1::2] * 2)
+        # resurrect half of the deleted keys with new values
+        res = ks[::4]
+        cursor_before = int(st.cursor)
+        if kind == "scan":
+            st, ok = B.insert(st, res, res * 7, nb)
+        else:
+            st, ok, _ = B.insert_parallel(st, res, res * 7, nb)
+        assert bool(ok.all())
+        found, vals = B.lookup(st, ks, nb)
+        exp_found = (np.arange(32) % 2 == 1) | (np.arange(32) % 4 == 0)
+        np.testing.assert_array_equal(np.asarray(found), exp_found)
+        np.testing.assert_array_equal(
+            np.asarray(vals)[::4], np.asarray(res) * 7)
+        np.testing.assert_array_equal(
+            np.asarray(vals)[1::2], np.asarray(ks)[1::2] * 2)
+        assert cursor_before == int(st.cursor)  # resurrection: no alloc
+        # still-deleted keys stay invisible
+        still_dead = np.asarray(ks)[2::4]
+        f2, _ = B.lookup(st, jnp.asarray(still_dead), nb)
+        assert not bool(f2.any())
+
+
 def test_cross_check_with_instruction_level_structure():
     """Same workload through the instruction-level hash table and the
     batched map: identical abstract contents and same per-op fence count."""

@@ -283,6 +283,92 @@ def test_membership_index_mixed_update_and_remove():
     assert not idx.contains([2**40])[0]
 
 
+def test_update_parallel_valid_mask_transparent():
+    """Invalid (padding) ops are fully transparent: running the full
+    batch with a mask is *bit-identical* to running only the valid
+    subset — state arrays, accounting, and the valid ops' ok flags —
+    even with pads interleaved mid-way through duplicate-key groups
+    (the sharded layer's all-to-all padding relies on this)."""
+    rng = np.random.default_rng(9)
+    for trial in range(4):
+        n = 64
+        ops = jnp.asarray(rng.integers(0, 2, size=n))
+        ks = jnp.asarray(rng.integers(0, 20, size=n))   # dup-heavy
+        vs = jnp.asarray(rng.integers(0, 1000, size=n))
+        valid = jnp.asarray(rng.random(n) < 0.6)
+        st_m, ok_m, stats_m = B.update_parallel(
+            B.make_state(512, NB), ops, ks, vs, NB, valid=valid)
+        sub = np.flatnonzero(np.asarray(valid))
+        st_s, ok_s, _ = B.update_parallel(
+            B.make_state(512, NB), ops[sub], ks[sub], vs[sub], NB)
+        assert_states_equal(st_m, st_s, f"trial {trial}")
+        np.testing.assert_array_equal(np.asarray(ok_m)[sub],
+                                      np.asarray(ok_s))
+        assert not bool(np.asarray(ok_m)[np.asarray(~valid)].any())
+        assert int(stats_m.coalesced_fences) == 2 * int(stats_m.max_group)
+
+
+def test_update_parallel_all_invalid_is_noop():
+    st0, _, _ = B.insert_parallel(B.make_state(64, NB), jnp.arange(1, 9),
+                                  jnp.arange(1, 9), NB)
+    st, ok, stats = B.update_parallel(
+        st0, jnp.zeros(16, jnp.int32), jnp.arange(1, 17),
+        jnp.arange(1, 17), NB, valid=jnp.zeros(16, jnp.bool_))
+    assert not bool(ok.any())
+    assert_states_equal(st, st0, "all-invalid")
+    assert int(stats.ops_committed) == 0
+    assert int(stats.coalesced_fences) == 0
+
+
+def test_valid_mask_mid_group_pad_does_not_resurrect():
+    """A pad shaped like an insert sitting *between* a real delete and a
+    real insert of the same key must not leak into the liveness
+    composition (an unmasked insert there would make the later real
+    insert fail)."""
+    I, D = B.OP_INSERT, B.OP_DELETE
+    st0, _, _ = B.insert_parallel(B.make_state(64, NB), jnp.asarray([5]),
+                                  jnp.asarray([50]), NB)
+    ops = jnp.asarray([D, I, I])
+    ks = jnp.full(3, 5)
+    vs = jnp.asarray([0, 999, 51])
+    valid = jnp.asarray([True, False, True])
+    st, ok, _ = B.update_parallel(st0, ops, ks, vs, NB, valid=valid)
+    assert list(np.asarray(ok)) == [True, False, True]
+    found, vals = B.lookup(st, jnp.asarray([5]), NB)
+    assert bool(found[0]) and int(vals[0]) == 51   # not the pad's 999
+    # oracle agreement on the valid subset
+    st_o, ok_o = B.apply(st0, ops[jnp.asarray([0, 2])],
+                         ks[jnp.asarray([0, 2])],
+                         vs[jnp.asarray([0, 2])], NB)
+    assert_states_equal(st_o, st, "mid-group pad")
+
+
+def test_commit_stats_bucket_flushes():
+    """bucket_flushes is the per-bucket breakdown of the flush
+    accounting: sums to coalesced_flushes, nonzero exactly on the
+    buckets of committing ops (2 per fresh insert, 1 per
+    resurrect/delete), zero for failed ops."""
+    st = B.make_state(512, NB)
+    ks = jnp.arange(1, 41)
+    st, _, stats = B.insert_parallel(st, ks, ks, NB)
+    bf = np.asarray(stats.bucket_flushes)
+    assert bf.sum() == int(stats.coalesced_flushes) == 80
+    counts = np.zeros(NB, np.int64)
+    for k in np.asarray(ks):
+        counts[int(B.bucket_of(jnp.int32(k), NB))] += 2   # fresh: 2 each
+    np.testing.assert_array_equal(bf, counts)
+    # resurrect/delete flush 1 each, into the key's own bucket only
+    st, _, stats_d = B.delete_parallel(st, ks[:4], NB)
+    bf_d = np.asarray(stats_d.bucket_flushes)
+    assert bf_d.sum() == 4
+    for k in np.asarray(ks[:4]):
+        assert bf_d[int(B.bucket_of(jnp.int32(k), NB))] >= 1
+    # failed ops contribute nothing anywhere
+    _, ok, stats_f = B.insert_parallel(st, ks[4:8], ks[4:8], NB)
+    assert not bool(ok.any())
+    assert np.asarray(stats_f.bucket_flushes).sum() == 0
+
+
 def test_plan_phase_does_no_persistence_work():
     """The journey: planning a batch reads no fence/flush state and the
     failed ops of a commit add nothing to the accounting."""

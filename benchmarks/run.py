@@ -253,6 +253,120 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
                  f"bit_exact={bit_exact}"))
 
 
+def bench_nvt_migrate(rows, out_json="BENCH_nvt.json"):
+    """Online-growth section: a map seeded at capacity C absorbs 8C
+    inserts under live mixed traffic, growing itself through the bounded
+    migration rounds of :mod:`repro.core.migrate` — per point we record
+    migrations run, amortized rounds per op, wall time per op,
+    chain/load-factor shape before and after growth, and a per-key
+    content-identity check against a python-dict oracle driven through
+    the same stream.  Points: update ratio 0/20/50% × uniform vs skewed
+    (zipf) update keys.  Merged under ``out_json["migrate"]``."""
+    import json
+    import numpy as np
+    from repro.core.migrate import MigratingMap
+
+    C, NB0, BATCH = 2048, 64, 512
+    TOTAL = 8 * C
+    migrate = {}
+    for dist in ("uniform", "skewed"):
+        for ratio in NVT_RATIOS:
+            rng = np.random.default_rng(NVT_MIXED_SEED + ratio)
+            m = MigratingMap(capacity=C, n_buckets=NB0,
+                             rounds_per_update=2)
+            model = {}
+            next_key = 1
+            chain0 = None
+            t_map = 0.0       # time in m.update() only — the dict
+            inserted = 0      # oracle + chain sampling stay untimed so
+            n_ops = 0         # us_per_op is comparable to the sections
+            while inserted < TOTAL:       # that time bare engine calls
+                n_upd = BATCH * ratio // 100
+                n_ins = BATCH - n_upd
+                n_ops += BATCH
+                ks_ins = np.arange(next_key, next_key + n_ins,
+                                   dtype=np.int32)
+                next_key += n_ins
+                inserted += n_ins
+                seen = max(1, next_key - 1)
+                if dist == "uniform":
+                    ks_upd = rng.integers(
+                        1, seen + 1, size=n_upd).astype(np.int32)
+                else:
+                    ks_upd = (rng.zipf(1.3, size=n_upd)
+                              % seen + 1).astype(np.int32)
+                ops = np.concatenate([
+                    np.zeros(n_ins, np.int32),
+                    rng.integers(0, 2, size=n_upd).astype(np.int32)])
+                ks = np.concatenate([ks_ins, ks_upd])
+                vs = (ks * 3).astype(np.int32)
+                t0 = time.perf_counter()
+                ok = m.update(ops, ks, vs)
+                t_map += time.perf_counter() - t0
+                for o, k, v, okk in zip(ops, ks, vs, ok):
+                    k = int(k)
+                    if o == 0:
+                        if bool(okk):
+                            model[k] = int(v)
+                    elif bool(okk):
+                        del model[k]
+                if m.migrations_completed == 0 and not m.migrating:
+                    # keep the newest pre-growth shape: the last sample
+                    # before the first migration is the seed table at
+                    # its fullest — the "before" of the chain comparison
+                    from repro.core import batched as B
+                    mx0, mean0 = B.chain_stats(m.state, m.n_buckets)
+                    chain0 = (int(mx0), float(mean0),
+                              len(model) / m.n_buckets)
+            from repro.core import batched as B
+            items = m.items()
+            live = {k for k, (l, _) in items.items() if l}
+            ident = live == set(model) and all(
+                items[k][1] == v for k, v in model.items())
+            mx1, mean1 = B.chain_stats(m.state, m.n_buckets)
+            migrate[f"{dist}_{ratio}"] = {
+                "distribution": dist,
+                "update_ratio": ratio,
+                "seed_capacity": C,
+                "inserts_absorbed": TOTAL,
+                "final_capacity": m.capacity,
+                "final_n_buckets": m.n_buckets,
+                "migrations": m.migrations_completed,
+                "rounds": m.rounds_total,
+                "rounds_per_op": m.rounds_total / n_ops,
+                "pulls": m.pulls_total,
+                "us_per_op": t_map / n_ops * 1e6,
+                "state_identical": bool(ident),
+                "chain_stats_before": {
+                    "max_chain": chain0[0],
+                    "mean_chain": chain0[1],
+                    "load_factor": chain0[2],
+                } if chain0 else None,
+                "chain_stats_after": {
+                    "max_chain": int(mx1),
+                    "mean_chain": float(mean1),
+                    "load_factor": len(live) / m.n_buckets,
+                },
+            }
+    report = _load_report(out_json)
+    report["migrate"] = {
+        "seed_capacity": C,
+        "seed_n_buckets": NB0,
+        "growth_factor": 8,
+        "note": "us_per_op includes jit compiles for newly reached "
+                "capacities; the first point pays most of them",
+        "points": migrate,
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# merged migrate section into {out_json}", file=sys.stderr)
+    for name, p in migrate.items():
+        rows.append((f"nvt,migrate_{name}", p["us_per_op"],
+                     f"migrations={p['migrations']};"
+                     f"rounds_per_op={p['rounds_per_op']:.4f};"
+                     f"state_identical={p['state_identical']}"))
+
+
 def bench_nvt_sharded(rows, out_json="BENCH_nvt.json",
                       device_counts=(1, 2, 4, 8)):
     """Sharded durable map vs the single-device plan/commit engine on
@@ -378,8 +492,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
-                         "fig6,hashmap,batched,nvt,sharded,ckpt,kernels,"
-                         "roofline")
+                         "fig6,hashmap,batched,nvt,migrate,sharded,ckpt,"
+                         "kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -389,6 +503,8 @@ def main() -> None:
         bench_batched_hashmap(rows)
     if only is None or only & {"nvt", "batched"}:
         bench_nvt(rows)
+    if only is None or "migrate" in only:
+        bench_nvt_migrate(rows)
     if only is None or "sharded" in only:
         bench_nvt_sharded(rows)
     if only is None or "ckpt" in only:

@@ -70,7 +70,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-NULL = jnp.int32(0)   # node id 0 is reserved as null
+NIL = jnp.int32(-1)   # explicit chain-link sentinel: no valid node id is
+                      # negative, so an empty link can never alias a node.
+                      # (Slot 0 additionally stays reserved — the bump
+                      # cursor starts at 1 — so legacy zero-initialized
+                      # link fields are *also* never a valid node.)
+NULL = NIL            # back-compat alias
 
 OP_INSERT = 0         # per-op codes for the mixed engines (apply /
 OP_DELETE = 1         # update_parallel)
@@ -79,7 +84,7 @@ OP_DELETE = 1         # update_parallel)
 class HashMapState(NamedTuple):
     key: jax.Array          # int32[N] node keys
     val: jax.Array          # int32[N] node values
-    nxt: jax.Array          # int32[N] chain links (0 = null)
+    nxt: jax.Array          # int32[N] chain links (NIL = end of chain)
     live: jax.Array         # bool[N]  logically present (False = deleted)
     head: jax.Array         # int32[B] bucket heads
     cursor: jax.Array       # int32    bump allocator (next free node id)
@@ -88,12 +93,17 @@ class HashMapState(NamedTuple):
 
 
 def make_state(capacity: int, n_buckets: int) -> HashMapState:
+    """Fresh empty map.  Links (``nxt``, ``head``) are :data:`NIL`-filled:
+    an empty link is explicitly distinguishable from every node index
+    (node 0 included), so chain-walking code — in particular the
+    migration engine's bucket drains — can never confuse "end of chain"
+    with "points at node 0"."""
     return HashMapState(
         key=jnp.zeros(capacity, jnp.int32),
         val=jnp.zeros(capacity, jnp.int32),
-        nxt=jnp.zeros(capacity, jnp.int32),
+        nxt=jnp.full(capacity, NIL, jnp.int32),
         live=jnp.zeros(capacity, jnp.bool_),
-        head=jnp.zeros(n_buckets, jnp.int32),
+        head=jnp.full(n_buckets, NIL, jnp.int32),
         cursor=jnp.int32(1),
         flushes=jnp.int32(0),
         fences=jnp.int32(0),
@@ -112,16 +122,41 @@ def bucket_of(k: jax.Array, n_buckets: int) -> jax.Array:
     return (_mix(k) % jnp.uint32(n_buckets)).astype(jnp.int32)
 
 
+def bucket_of_np(k, n_buckets: int):
+    """Numpy twin of :func:`bucket_of` for host-side routing decisions
+    (migration round planning, per-shard fits checks) — bit-identical to
+    the jitted hash."""
+    import numpy as np
+    x = np.asarray(k).astype(np.uint32)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    x = x ^ (x >> np.uint32(16))
+    return (x % np.uint32(n_buckets)).astype(np.int32)
+
+
 # --------------------------------------------------------------------- #
 # traversal (the journey — zero persistence work)                        #
 # --------------------------------------------------------------------- #
-def _find(state: HashMapState, k: jax.Array, n_buckets: int):
-    """Walk the chain; returns (node_id_or_0, steps)."""
-    b = bucket_of(k, n_buckets)
+def _bucket_local(k: jax.Array, n_buckets: int, nb_global, base):
+    """Local bucket of ``k``: plain ``hash mod n_buckets`` by default, or
+    — when this state holds the contiguous global-bucket range
+    ``[base, base+n_buckets)`` of an ``nb_global``-bucket hash space —
+    ``hash mod nb_global - base``.  Clipped so out-of-range keys (padding
+    slots the caller masks out) index harmlessly instead of wrapping."""
+    if nb_global is None:
+        return bucket_of(k, n_buckets)
+    b = bucket_of(k, nb_global) - jnp.asarray(base, jnp.int32)
+    return jnp.clip(b, 0, n_buckets - 1)
+
+
+def _find(state: HashMapState, k: jax.Array, n_buckets: int,
+          nb_global=None, base=None):
+    """Walk the chain; returns (node_id_or_NIL, steps)."""
+    b = _bucket_local(k, n_buckets, nb_global, base)
 
     def cond(c):
         node, _ = c
-        return (node != NULL) & (state.key[node] != k)
+        return (node != NIL) & (state.key[node] != k)
 
     def body(c):
         node, steps = c
@@ -131,13 +166,37 @@ def _find(state: HashMapState, k: jax.Array, n_buckets: int):
     return node, steps
 
 
-@partial(jax.jit, static_argnames="n_buckets")
-def lookup(state: HashMapState, ks: jax.Array, n_buckets: int):
-    """Batched lookup: returns (found bool[batch], vals int32[batch])."""
+@partial(jax.jit, static_argnames=("n_buckets", "nb_global"))
+def lookup(state: HashMapState, ks: jax.Array, n_buckets: int,
+           nb_global=None, base=None):
+    """Batched lookup: returns (found bool[batch], vals int32[batch]).
+
+    ``nb_global``/``base`` (optional) treat the state as the owner of the
+    contiguous global bucket range ``[base, base+n_buckets)`` of an
+    ``nb_global``-bucket hash space — the sharded layer's re-splittable
+    bucket ranges (core/sharded.py)."""
     def one(k):
-        node, _ = _find(state, k, n_buckets)
-        found = (node != NULL) & state.live[node]
+        node, _ = _find(state, k, n_buckets, nb_global, base)
+        found = (node != NIL) & state.live[node]
         return found, jnp.where(found, state.val[node], 0)
+
+    return jax.vmap(one)(ks)
+
+
+@partial(jax.jit, static_argnames=("n_buckets", "nb_global"))
+def probe(state: HashMapState, ks: jax.Array, n_buckets: int,
+          nb_global=None, base=None):
+    """Node-level probe (the journey — zero persistence work): returns
+    ``(exists, live, vals)`` where ``exists`` is True iff the key has a
+    node at all, dead or alive.  The migration engine uses this to make
+    the new table authoritative: a key with *any* node in the new table
+    must never be re-pulled from the old one (a dead node there means
+    "deleted during migration", not "absent")."""
+    def one(k):
+        node, _ = _find(state, k, n_buckets, nb_global, base)
+        exists = node != NIL
+        live = exists & state.live[node]
+        return exists, live, jnp.where(exists, state.val[node], 0)
 
     return jax.vmap(one)(ks)
 
@@ -158,7 +217,7 @@ def insert(state: HashMapState, ks: jax.Array, vs: jax.Array,
     def step(st: HashMapState, kv):
         k, v = kv
         node, _ = _find(st, k, n_buckets)
-        exists_live = (node != NULL) & st.live[node]
+        exists_live = (node != NIL) & st.live[node]
 
         def do_resurrect(st):
             # value write + unmark: flush the node line, fence, return fence
@@ -187,7 +246,7 @@ def insert(state: HashMapState, ks: jax.Array, vs: jax.Array,
             return st
 
         def do_insert(st):
-            dead_here = (node != NULL) & ~st.live[node]
+            dead_here = (node != NIL) & ~st.live[node]
             return jax.lax.cond(dead_here, do_resurrect, do_fresh, st)
 
         st = jax.lax.cond(exists_live, lambda s: s, do_insert, st)
@@ -204,7 +263,7 @@ def delete(state: HashMapState, ks: jax.Array, n_buckets: int):
 
     def step(st: HashMapState, k):
         node, _ = _find(st, k, n_buckets)
-        present = (node != NULL) & st.live[node]
+        present = (node != NIL) & st.live[node]
 
         def do(st):
             return st._replace(
@@ -238,7 +297,7 @@ def apply(state: HashMapState, ops: jax.Array, ks: jax.Array,
     def step(st: HashMapState, okv):
         op, k, v = okv
         node, _ = _find(st, k, n_buckets)
-        exists_live = (node != NULL) & st.live[node]
+        exists_live = (node != NIL) & st.live[node]
 
         def do_resurrect(st):
             return st._replace(
@@ -273,7 +332,7 @@ def apply(state: HashMapState, ops: jax.Array, ks: jax.Array,
                 return st, jnp.bool_(False)
 
             def attempt(st):
-                dead_here = (node != NULL) & ~st.live[node]
+                dead_here = (node != NIL) & ~st.live[node]
                 return jax.lax.cond(dead_here, do_resurrect, do_fresh, st)
 
             return jax.lax.cond(exists_live, fail, attempt, st)
@@ -326,14 +385,16 @@ class CommitStats(NamedTuple):
     bucket_flushes: jax.Array     # int32[n_buckets]  flushes per bucket
 
 
-def _plan(state: HashMapState, ks: jax.Array, n_buckets: int):
+def _plan(state: HashMapState, ks: jax.Array, n_buckets: int,
+          nb_global=None, base=None):
     """The journey, batch-wide: locate every op's destination against the
     pre-batch snapshot with a vmap'd chain walk.  No persistence state is
     read or written."""
-    node = jax.vmap(lambda k: _find(state, k, n_buckets)[0])(ks)
-    snap_exists = node != NULL
+    node = jax.vmap(
+        lambda k: _find(state, k, n_buckets, nb_global, base)[0])(ks)
+    snap_exists = node != NIL
     snap_live = snap_exists & state.live[node]
-    bucket = bucket_of(ks, n_buckets)
+    bucket = _bucket_local(ks, n_buckets, nb_global, base)
     return node, snap_exists, snap_live, bucket
 
 
@@ -354,9 +415,10 @@ def _commit_stats(bucket: jax.Array, ok: jax.Array, flushes_per_op,
     )
 
 
-@partial(jax.jit, static_argnames="n_buckets")
+@partial(jax.jit, static_argnames=("n_buckets", "nb_global"))
 def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
-                    vs: jax.Array, n_buckets: int, valid=None):
+                    vs: jax.Array, n_buckets: int, valid=None,
+                    nb_global=None, base=None):
     """Unified mixed-op engine: one plan/commit round over interleaved
     inserts and deletes (``ops[i]`` ∈ {:data:`OP_INSERT`,
     :data:`OP_DELETE`}).  Bit-identical to the sequential mixed oracle
@@ -389,7 +451,13 @@ def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
     (``ok=False``, no state change) — and every later op of its
     duplicate-key group fails with it, exactly as re-running each op
     against the still-exhausted pool would.  Full-map overflow is
-    detectable by the caller instead of corrupting chains."""
+    detectable by the caller instead of corrupting chains.
+
+    ``nb_global``/``base`` (optional, see :func:`lookup`) commit against
+    the contiguous global bucket range ``[base, base+n_buckets)`` of an
+    ``nb_global``-bucket hash space — what lets the sharded layer's
+    re-splittable (possibly uneven) bucket ranges run this engine
+    unmodified per shard."""
     ops = ops.astype(jnp.int32)
     ks = ks.astype(jnp.int32)
     vs = vs.astype(jnp.int32)
@@ -401,7 +469,8 @@ def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
             empty, jnp.zeros(0, jnp.bool_), empty, n_buckets)
 
     # ---- plan: the journey, fully parallel, zero persistence ---------- #
-    node, snap_exists, snap_live, bucket = _plan(state, ks, n_buckets)
+    node, snap_exists, snap_live, bucket = _plan(state, ks, n_buckets,
+                                                 nb_global, base)
     is_ins = ops == OP_INSERT
 
     # ---- merged conflict resolution: per-key liveness composition ----- #
@@ -463,7 +532,9 @@ def update_parallel(state: HashMapState, ops: jax.Array, ks: jax.Array,
     # pre-allocator ops of a capacity-failed group see is harmless)
     s_fresh_nid = jnp.where(s_alloc, state.cursor + rank[order], 0)
     seg_nid = jnp.zeros(n, jnp.int32).at[seg].max(s_fresh_nid)
-    s_nid = s_node + seg_nid[seg]           # s_node == 0 in absent groups
+    s_nid = jnp.where(s_exists, s_node, seg_nid[seg])   # NIL in absent
+    # groups is replaced by the allocator's fresh id (0 when the whole
+    # group capacity-failed — those ops never write, so it is inert)
 
     # the last successful op / insert of each group decide final values
     last_ok = jnp.full(n, -1, jnp.int32).at[seg].max(
@@ -544,7 +615,7 @@ def chain_stats(state: HashMapState, n_buckets: int):
     def walk(b):
         def cond(c):
             node, steps = c
-            return (node != NULL) & (steps < state.key.shape[0])
+            return (node != NIL) & (steps < state.key.shape[0])
 
         def body(c):
             node, steps = c

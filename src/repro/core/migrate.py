@@ -1,0 +1,591 @@
+"""Online migration engine: dynamic resize/rehash with NVTraverse-correct
+migration commits.
+
+The bump-allocator durable map (:mod:`repro.core.batched`) has a fixed
+node pool and a fixed bucket count.  This module grows both *online*: a
+migration is a sequence of **bounded rounds**, each of which drains a
+contiguous bucket range from the old table and commits it into a larger
+new table as one plan/commit batch — the same ``update_parallel`` engine
+user traffic runs on, so every migrated key pays exactly the paper's
+O(1) flushes + 2 fences at its destination and nothing on the journey.
+
+Invariants (the migration protocol):
+
+* **The old table is frozen.**  From ``start_migration`` on, every user
+  update commits into the *new* table only; the old table is never
+  written again.  Its pre-migration snapshot is therefore a stable drain
+  source for every round.
+* **New is authoritative per key.**  Once a key has *any* node in the
+  new table — live or dead — the new table's word is final.  A dead node
+  in the new table means "deleted during migration", and must never be
+  resurrected from the old table's stale copy; drains filter on
+  :func:`repro.core.batched.probe`'s ``exists``, not on insert success.
+* **Lookups are new-then-old, deterministically**: if the key has a node
+  in the new table, answer from it; otherwise answer from the old table.
+  (The frontier makes the old consult redundant for drained buckets —
+  their live keys all exist in the new table — so the rule needs no
+  frontier check and cannot race one.)
+* **User updates pull first.**  A user batch during migration is
+  committed as one *mixed* ``update_parallel`` round of
+  ``[pull-inserts; user ops]``: each distinct user key that is live in
+  the old table and absent from the new is first pulled over with its
+  old value, after which the user's inserts/deletes see exactly the
+  merged map's liveness.  Pulls are ordinary inserts — same accounting,
+  same conflict resolution.
+* **The frontier is durable.**  Each round — drain or user — is
+  journaled (``round_NNNNNN.npz``: op codes, keys, values, frontier
+  after) with flush → fence → atomic publish, and the
+  :class:`MigrationState` header (phase, frontier, old/new pool handles)
+  is published at start and at finish.  A crash between rounds recovers
+  by replaying the journal over the old-table snapshot: the engine is
+  deterministic, so the recovered state is *bit-identical* to the
+  pre-round or post-round state — never a torn mix — and migration
+  resumes from the recovered frontier.
+
+:class:`MigratingMap` wraps all of this behind the ordinary
+insert/delete/update/lookup API and grows itself automatically: an
+update batch that would not fit triggers ``start_migration`` and each
+subsequent update advances ``rounds_per_update`` migration rounds, so a
+map seeded at capacity C absorbs an unbounded key stream under live
+mixed traffic.  :func:`migrate_state` is the journal-free functional
+core (used by :class:`repro.persistence.index.MembershipIndex` growth
+and the sharded layer's rebalancing).
+"""
+from __future__ import annotations
+
+import io as _io
+import json
+from pathlib import Path
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import batched as B
+
+_NIL = int(B.NIL)
+
+
+class MigrationState(NamedTuple):
+    """The durable migration header — small enough to publish atomically.
+
+    ``old``/``new`` are *pool handles*: (capacity, n_buckets) pairs that,
+    with the journaled rounds, fully determine both tables.  ``phase``
+    is ``"migrating"`` until the last drain round publishes, then
+    ``"done"``.  ``frontier``/``n_rounds`` are snapshots *as of the
+    header's publish* (0 at start; final values in the ``done``
+    header) — live progress is derived from the published round files
+    themselves on recovery, never from a stale header."""
+    phase: str
+    frontier: int          # global old-bucket drain frontier
+    old: Tuple[int, int]   # (capacity, n_buckets) of the frozen old pool
+    new: Tuple[int, int]   # (capacity, n_buckets) of the growing new pool
+    buckets_per_round: int
+    n_rounds: int          # journaled rounds (drain + user)
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(self._asdict(), sort_keys=True).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "MigrationState":
+        d = json.loads(b.decode())
+        return MigrationState(phase=d["phase"], frontier=d["frontier"],
+                              old=tuple(d["old"]), new=tuple(d["new"]),
+                              buckets_per_round=d["buckets_per_round"],
+                              n_rounds=d["n_rounds"])
+
+
+class MigrationReport(NamedTuple):
+    rounds: int            # drain rounds run
+    migrated: int          # live keys drained into the new table
+    skipped: int           # drained keys already owned by the new table
+    max_round_batch: int   # largest drain batch (bounded-round proof)
+
+
+# --------------------------------------------------------------------- #
+# host-side helpers                                                      #
+# --------------------------------------------------------------------- #
+def _pad_pow2(*arrs, n=None):
+    """Pad arrays to the next power of two (valid-masked), capping jit
+    retraces at one per log2 size.  Returns (padded jnp arrays, valid)."""
+    n = arrs[0].shape[0] if n is None else n
+    total = max(1, 1 << (n - 1).bit_length())
+    out = [jnp.asarray(np.concatenate(
+        [a, np.zeros(total - n, a.dtype)])) for a in arrs]
+    return out, jnp.asarray(np.arange(total) < n)
+
+
+def _probe_np(state, ks: np.ndarray, n_buckets: int):
+    """Host-facing :func:`repro.core.batched.probe` (padded, trimmed)."""
+    n = ks.shape[0]
+    if n == 0:
+        z = np.zeros(0, np.bool_)
+        return z, z, np.zeros(0, np.int32)
+    (pk,), _ = _pad_pow2(ks)
+    ex, live, vals = B.probe(state, pk, n_buckets)
+    return (np.asarray(ex)[:n], np.asarray(live)[:n],
+            np.asarray(vals)[:n])
+
+
+def host_state(state) -> dict:
+    """One device_get of every field → plain numpy dict (the frozen old
+    table is read this way once per migration, then sliced per round)."""
+    import jax
+    st = jax.device_get(state)
+    return {f: np.asarray(getattr(st, f)) for f in st._fields}
+
+
+def drain_range(old: dict, lo: int, hi: int):
+    """Canonical drain order of old buckets ``[lo, hi)``: bucket
+    ascending, chain head→tail (newest-first) within a bucket, live
+    nodes only.  Deterministic, so replaying the drained sequence
+    through either engine rebuilds the same table bit for bit."""
+    ks, vs = [], []
+    head, nxt = old["head"], old["nxt"]
+    key, val, live = old["key"], old["val"], old["live"]
+    for b in range(lo, hi):
+        node = int(head[b])
+        while node != _NIL:
+            if live[node]:
+                ks.append(key[node])
+                vs.append(val[node])
+            node = int(nxt[node])
+    return (np.asarray(ks, np.int32), np.asarray(vs, np.int32))
+
+
+def items_of_host(old: dict) -> dict:
+    """``{key: (live, val)}`` over allocated nodes of a host-side map."""
+    c = int(old["cursor"])
+    return {int(k): (bool(l), int(v)) for k, l, v in
+            zip(old["key"][1:c], old["live"][1:c], old["val"][1:c])}
+
+
+def _run_batch(state, ops, ks, vs, n_buckets: int):
+    """One padded plan/commit round; returns (state', ok, stats)."""
+    n = ks.shape[0]
+    if n == 0:
+        return state, np.zeros(0, np.bool_), None
+    (po, pk, pv), valid = _pad_pow2(ops, ks, vs)
+    state, ok, stats = B.update_parallel(state, po, pk, pv, n_buckets,
+                                         valid=valid)
+    return state, np.asarray(ok)[:n], stats
+
+
+def migrate_state(state, n_buckets: int, new_capacity: int,
+                  new_n_buckets: Optional[int] = None,
+                  buckets_per_round: Optional[int] = None):
+    """Journal-free full migration: drain ``state`` into a fresh
+    ``(new_capacity, new_n_buckets)`` table in bounded rounds of
+    ``buckets_per_round`` old buckets each.  Returns
+    ``(new_state, MigrationReport)``.  Every drained insert must land —
+    the caller sizes the new pool — so a capacity failure here raises
+    instead of silently dropping keys."""
+    nb_new = new_n_buckets or 2 * n_buckets
+    bpr = buckets_per_round or max(1, n_buckets // 16)
+    old = host_state(state)
+    new = B.make_state(new_capacity, nb_new)
+    rounds = migrated = max_batch = 0
+    for lo in range(0, n_buckets, bpr):
+        ks, vs = drain_range(old, lo, min(lo + bpr, n_buckets))
+        ops = np.zeros(ks.shape[0], np.int32)       # all OP_INSERT
+        new, ok, _ = _run_batch(new, ops, ks, vs, nb_new)
+        if not ok.all():
+            raise RuntimeError(
+                f"migration drain overflowed the new pool "
+                f"(capacity {new_capacity}) at bucket {lo}")
+        rounds += 1
+        migrated += ks.shape[0]
+        max_batch = max(max_batch, int(ks.shape[0]))
+    return new, MigrationReport(rounds=rounds, migrated=migrated,
+                                skipped=0, max_round_batch=max_batch)
+
+
+# --------------------------------------------------------------------- #
+# the online map                                                         #
+# --------------------------------------------------------------------- #
+class MigratingMap:
+    """Durable map with online capacity growth + rehash.
+
+    Steady state it is a thin host wrapper over the plan/commit engine.
+    When an update batch would not fit, it opens a migration to a table
+    of ``2×`` the pool (and ``2×`` the buckets — a true rehash, halving
+    the load factor), then amortizes the drain over subsequent traffic:
+    every ``update()`` first advances ``rounds_per_update`` migration
+    rounds, then commits the user batch into the new table (pull-first,
+    see module docstring).  ``root`` (optional) makes the migration
+    durable: the :class:`MigrationState` header and every round are
+    journaled through a :class:`repro.persistence.manifest.StagedIO`
+    with flush → fence → atomic publish, and :meth:`recover` rebuilds a
+    bit-identical map from the journal after a crash."""
+
+    def __init__(self, capacity: int = 4096, n_buckets: int = 128, *,
+                 root=None, buckets_per_round: Optional[int] = None,
+                 rounds_per_update: int = 1, seed: int = 0):
+        self.capacity = capacity
+        self.n_buckets = n_buckets
+        self.state = B.make_state(capacity, n_buckets)
+        self.buckets_per_round = buckets_per_round
+        self.rounds_per_update = rounds_per_update
+        self.io = None
+        if root is not None:
+            from ..persistence.manifest import StagedIO
+            self.io = StagedIO(Path(root), seed=seed)
+        self._mig = None           # in-flight migration bookkeeping
+        self._mig_seq = 0          # completed+started migrations (dir name)
+        self.migrations_completed = 0
+        self.rounds_total = 0
+        self.migrated_total = 0
+        self.pulls_total = 0
+        self.last_stats = None
+
+    # ---------------- steady-state + migrating op API ----------------- #
+    def update(self, ops, ks, vs) -> np.ndarray:
+        """One mixed plan/commit round in batch order; grows the map (via
+        migration rounds) whenever the batch would not fit.  Returns
+        per-op ``ok`` exactly as the engine would on an unbounded pool —
+        growth is invisible to callers."""
+        ops = np.asarray(ops, np.int32)
+        ks = np.asarray(ks, np.int32)
+        vs = np.asarray(vs, np.int32)
+        if self._mig is None:
+            if self._fits(self.state, self.capacity, self.n_buckets,
+                          ops, ks):
+                self.state, ok, self.last_stats = _run_batch(
+                    self.state, ops, ks, vs, self.n_buckets)
+                return ok
+            self.start_migration(
+                new_capacity=self._grown_capacity(ops, ks))
+        for _ in range(self.rounds_per_update):
+            if self._mig is not None:
+                self.migrate_round()
+        if self._mig is None:
+            return self.update(ops, ks, vs)     # finished mid-call
+        return self._commit_migrating(ops, ks, vs)
+
+    def insert(self, ks, vs) -> np.ndarray:
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, B.OP_INSERT, np.int32),
+                           ks, vs)
+
+    def delete(self, ks) -> np.ndarray:
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, B.OP_DELETE, np.int32),
+                           ks, np.zeros_like(ks))
+
+    def lookup(self, ks) -> Tuple[np.ndarray, np.ndarray]:
+        """New-then-old: a key with any node in the new table is answered
+        from it (its dead nodes veto the old table's stale copy);
+        otherwise the old table answers.  Zero persistence work."""
+        ks = np.asarray(ks, np.int32)
+        if self._mig is None:
+            n = ks.shape[0]
+            if n == 0:
+                return np.zeros(0, np.bool_), np.zeros(0, np.int32)
+            (pk,), _ = _pad_pow2(ks)
+            f, v = B.lookup(self.state, pk, self.n_buckets)
+            return np.asarray(f)[:n], np.asarray(v)[:n]
+        m = self._mig
+        ex_new, live_new, val_new = _probe_np(m["new"], ks, m["nb_new"])
+        _, live_old, val_old = _probe_np(self.state, ks, self.n_buckets)
+        found = np.where(ex_new, live_new, live_old)
+        vals = np.where(ex_new, val_new, val_old).astype(np.int32)
+        return found, np.where(found, vals, 0).astype(np.int32)
+
+    def items(self) -> dict:
+        """Abstract content ``{key: (live, val)}``, new-authoritative."""
+        out = items_of_host(host_state(self.state))
+        if self._mig is not None:
+            out.update(items_of_host(host_state(self._mig["new"])))
+        return out
+
+    @property
+    def migrating(self) -> bool:
+        return self._mig is not None
+
+    @property
+    def frontier(self) -> Optional[int]:
+        return None if self._mig is None else self._mig["frontier"]
+
+    @property
+    def flushes(self) -> int:
+        f = int(self.state.flushes)
+        if self._mig is not None:
+            f += int(self._mig["new"].flushes)
+        return f
+
+    @property
+    def fences(self) -> int:
+        f = int(self.state.fences)
+        if self._mig is not None:
+            f += int(self._mig["new"].fences)
+        return f
+
+    # ---------------- capacity planning -------------------------------- #
+    def _fits(self, state, capacity, n_buckets, ops, ks,
+              reserve: int = 0) -> bool:
+        """Exact fit check: the batch allocates one node per distinct
+        absent key that has at least one insert op (resurrects and
+        deletes never allocate).  The probe (a device round-trip) only
+        runs when the batch-size upper bound does not already prove
+        fitness — steady state costs one int comparison."""
+        if int(state.cursor) + ks.shape[0] + reserve <= capacity:
+            return True
+        ins = np.unique(ks[ops == B.OP_INSERT])
+        if ins.size:
+            ex, _, _ = _probe_np(state, ins, n_buckets)
+            n_fresh = int((~ex).sum())
+        else:
+            n_fresh = 0
+        return int(state.cursor) + n_fresh + reserve <= capacity
+
+    def _grown_capacity(self, ops, ks) -> int:
+        live = int(np.asarray(self.state.live).sum())
+        need = 1 + live + ks.shape[0]
+        cap = max(2 * self.capacity, 2 * need)
+        return cap
+
+    # ---------------- migration control -------------------------------- #
+    def start_migration(self, new_capacity: Optional[int] = None,
+                        new_n_buckets: Optional[int] = None,
+                        buckets_per_round: Optional[int] = None) -> None:
+        """Freeze the current table as the drain source, open an empty
+        larger table, and durably publish the :class:`MigrationState`
+        header (phase=migrating, frontier=0) plus the old-pool snapshot."""
+        assert self._mig is None, "migration already in flight"
+        cap_new = new_capacity or 2 * self.capacity
+        nb_new = new_n_buckets or 2 * self.n_buckets
+        bpr = (buckets_per_round or self.buckets_per_round
+               or max(1, self.n_buckets // 16))
+        old_host = host_state(self.state)
+        live_old = int(old_host["live"].sum())
+        self._mig = {
+            "new": B.make_state(cap_new, nb_new),
+            "cap_new": cap_new, "nb_new": nb_new, "bpr": bpr,
+            "frontier": 0, "n_rounds": 0,
+            "old_host": old_host,            # frozen: one device_get
+            "remaining_live": live_old,      # drain upper bound (reserve)
+            "migrated": 0, "skipped": 0,
+        }
+        self._mig_seq += 1
+        if self.io is not None:
+            d = self._mig_dir()
+            buf = _io.BytesIO()
+            np.savez(buf, **old_host)
+            self.io.write(f"{d}/old.npz", buf.getvalue())
+            self.io.flush(f"{d}/old.npz")
+            self._publish_header("migrating")
+
+    def _mig_dir(self) -> str:
+        return f"mig_{self._mig_seq:04d}"
+
+    def _header(self, phase: str) -> MigrationState:
+        m = self._mig
+        return MigrationState(
+            phase=phase, frontier=m["frontier"],
+            old=(self.capacity, self.n_buckets),
+            new=(m["cap_new"], m["nb_new"]),
+            buckets_per_round=m["bpr"], n_rounds=m["n_rounds"])
+
+    def _publish_header(self, phase: str) -> None:
+        d = self._mig_dir()
+        self.io.write(f"{d}/state.tmp", self._header(phase).to_bytes())
+        self.io.flush(f"{d}/state.tmp")
+        self.io.fence()
+        self.io.publish(f"{d}/state.tmp", f"{d}/state.json")
+
+    def _journal_round(self, ops, ks, vs, frontier_after: int) -> None:
+        """Durably commit one round: flush(record) → fence → publish
+        (the atomic rename is the CAS; a crash before it leaves the
+        journal at the previous round — pre-round state exactly)."""
+        m = self._mig
+        if self.io is None:
+            m["n_rounds"] += 1
+            return
+        d = self._mig_dir()
+        buf = _io.BytesIO()
+        np.savez(buf, ops=ops, ks=ks, vs=vs,
+                 frontier=np.int32(frontier_after))
+        tmp = f"{d}/round.tmp"
+        self.io.write(tmp, buf.getvalue())
+        self.io.flush(tmp)
+        self.io.fence()
+        self.io.publish(tmp, f"{d}/round_{m['n_rounds']:06d}.npz")
+        m["n_rounds"] += 1
+
+    def migrate_round(self) -> bool:
+        """Drain the next ``buckets_per_round`` old buckets into the new
+        table as one plan/commit batch, journal it, and advance the
+        frontier.  Returns True when the migration completed (the last
+        round also swaps the tables)."""
+        m = self._mig
+        assert m is not None, "no migration in flight"
+        lo = m["frontier"]
+        hi = min(lo + m["bpr"], self.n_buckets)
+        ks, vs = drain_range(m["old_host"], lo, hi)
+        n_live = ks.shape[0]
+        if n_live:
+            # new-authoritative filter: keys user traffic already pulled
+            # (or re-inserted, or deleted) must not be re-migrated
+            ex, _, _ = _probe_np(m["new"], ks, m["nb_new"])
+            ks, vs = ks[~ex], vs[~ex]
+        ops = np.zeros(ks.shape[0], np.int32)
+        m["new"], ok, _ = _run_batch(m["new"], ops, ks, vs, m["nb_new"])
+        if not ok.all():      # not assert: must survive python -O too
+            raise RuntimeError(
+                "migration drain dropped keys (new pool undersized: "
+                f"capacity {m['cap_new']}, frontier {lo})")
+        self._journal_round(ops, ks, vs, hi)
+        m["frontier"] = hi
+        m["migrated"] += int(ks.shape[0])
+        m["skipped"] += int(n_live - ks.shape[0])
+        m["remaining_live"] -= n_live
+        self.rounds_total += 1
+        self.migrated_total += int(ks.shape[0])
+        if hi >= self.n_buckets:
+            self._finish_migration()
+            return True
+        return False
+
+    def run_migration(self) -> MigrationReport:
+        """Drive the in-flight migration to completion (blocking)."""
+        assert self._mig is not None
+        m = self._mig
+        mx = 0
+        r0, g0, s0 = self.rounds_total, self.migrated_total, m["skipped"]
+        while self._mig is not None:
+            before = self.migrated_total
+            self.migrate_round()
+            mx = max(mx, self.migrated_total - before)
+        return MigrationReport(rounds=self.rounds_total - r0,
+                               migrated=self.migrated_total - g0,
+                               skipped=m["skipped"] - s0,
+                               max_round_batch=mx)
+
+    def _finish_migration(self) -> None:
+        m = self._mig
+        if self.io is not None:
+            self._publish_header("done")
+            if self._mig_seq > 1:      # previous migration's journal is
+                self.io.remove_tree(   # superseded: stop the geometric
+                    f"mig_{self._mig_seq - 1:04d}")   # disk growth
+        # carry the frozen old table's persistence accounting into the
+        # adopted state so the public flushes/fences counters stay
+        # monotone across growth events (they summed old+new during the
+        # migration; dropping the old half would step them backwards)
+        self.state = m["new"]._replace(
+            flushes=m["new"].flushes + self.state.flushes,
+            fences=m["new"].fences + self.state.fences)
+        self.capacity, self.n_buckets = m["cap_new"], m["nb_new"]
+        self._mig = None
+        self.migrations_completed += 1
+
+    def _commit_migrating(self, ops, ks, vs) -> np.ndarray:
+        """Commit a user batch into the new table as one mixed round of
+        ``[pull-inserts; user ops]`` (pull-first, see module docstring)."""
+        m = self._mig
+        uniq = np.unique(ks)
+        ex_new, _, _ = _probe_np(m["new"], uniq, m["nb_new"])
+        cand = uniq[~ex_new]
+        _, live_old, val_old = _probe_np(self.state, cand, self.n_buckets)
+        pull_ks = cand[live_old]
+        pull_vs = val_old[live_old].astype(np.int32)
+        # every pull and every fresh user insert allocates at worst one
+        # node; the un-drained remainder must still fit behind them
+        fresh_cand = cand[~live_old]     # absent from new AND old: only
+        n_fresh = int(pull_ks.size) + int(   # user inserts can alloc them
+            np.isin(np.unique(ks[ops == B.OP_INSERT]), fresh_cand,
+                    assume_unique=True).sum())
+        fits = (int(m["new"].cursor) + n_fresh + m["remaining_live"]
+                <= m["cap_new"])
+        if not fits:
+            # the new pool cannot take this batch plus the un-drained
+            # remainder: finish the migration now (the reserve guarantees
+            # the drains fit) and let the steady-state path grow again
+            self.run_migration()
+            return self.update(ops, ks, vs)
+        bops = np.concatenate(
+            [np.full(pull_ks.size, B.OP_INSERT, np.int32), ops])
+        bks = np.concatenate([pull_ks, ks])
+        bvs = np.concatenate([pull_vs, vs])
+        m["new"], ok, self.last_stats = _run_batch(
+            m["new"], bops, bks, bvs, m["nb_new"])
+        if not ok[:pull_ks.size].all():   # not assert: survive python -O
+            raise RuntimeError("migration pull dropped keys "
+                               "(reserve accounting bug)")
+        self._journal_round(bops, bks, bvs, m["frontier"])
+        self.pulls_total += int(pull_ks.size)
+        return ok[pull_ks.size:]
+
+    # ---------------- crash recovery ----------------------------------- #
+    def crash(self) -> None:
+        """Simulate a process kill: the staging area is lost (any
+        unfenced journal bytes with it) and the in-memory tables are
+        dropped.  Use :meth:`recover` on the same root afterwards."""
+        assert self.io is not None, "crash() needs a durable root"
+        self.io.crash(evict="none")
+        self.state = None
+        self._mig = None
+
+    @classmethod
+    def recover(cls, root, *, rounds_per_update: int = 1,
+                seed: int = 0) -> "MigratingMap":
+        """Rebuild from the journal: load the newest migration's header +
+        old-pool snapshot, replay the published rounds in order through
+        the plan/commit engine (deterministic → bit-identical), and
+        resume from the recovered frontier.  A ``done`` header recovers
+        the completed table; no migration dir recovers an empty map."""
+        root = Path(root)
+        digs = sorted(p.name for p in root.glob("mig_*")
+                      if (p / "state.json").exists())
+        m = cls(rounds_per_update=rounds_per_update, root=root, seed=seed)
+        if not digs:
+            return m
+        d = digs[-1]
+        hdr = MigrationState.from_bytes(
+            (root / d / "state.json").read_bytes())
+        old_npz = np.load(_io.BytesIO((root / d / "old.npz").read_bytes()))
+        old_host = {k: np.asarray(old_npz[k]) for k in old_npz.files}
+        m._mig_seq = int(d.split("_")[1])
+        m.capacity, m.n_buckets = hdr.old
+        cap_new, nb_new = hdr.new
+        new = B.make_state(cap_new, nb_new)
+        frontier = 0
+        n_rounds = 0
+        for rp in sorted((root / d).glob("round_*.npz")):
+            rec = np.load(_io.BytesIO(rp.read_bytes()))
+            new, ok, _ = _run_batch(new, np.asarray(rec["ops"]),
+                                    np.asarray(rec["ks"]),
+                                    np.asarray(rec["vs"]), nb_new)
+            frontier = max(frontier, int(rec["frontier"]))
+            n_rounds += 1
+        if hdr.phase == "done":
+            # same accounting carry as _finish_migration, so a recovered
+            # completed table is bit-identical to the live one's
+            m.state = new._replace(
+                flushes=new.flushes + jnp.int32(int(old_host["flushes"])),
+                fences=new.fences + jnp.int32(int(old_host["fences"])))
+            m.capacity, m.n_buckets = cap_new, nb_new
+            m.migrations_completed = 1
+            return m
+        # resume mid-migration: rebuild the frozen old table + reserve
+        m.state = B.HashMapState(**{k: jnp.asarray(v)
+                                    for k, v in old_host.items()})
+        drained = sum(1 for b in range(frontier)
+                      for _ in _iter_chain(old_host, b))
+        m._mig = {
+            "new": new, "cap_new": cap_new, "nb_new": nb_new,
+            "bpr": hdr.buckets_per_round, "frontier": frontier,
+            "n_rounds": n_rounds, "old_host": old_host,
+            "remaining_live": int(old_host["live"].sum()) - drained,
+            "migrated": 0, "skipped": 0,
+        }
+        return m
+
+
+def _iter_chain(old: dict, b: int):
+    """Yield the live node ids of old bucket ``b`` in chain order."""
+    node = int(old["head"][b])
+    while node != _NIL:
+        if old["live"][node]:
+            yield node
+        node = int(old["nxt"][node])

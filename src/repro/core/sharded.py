@@ -39,11 +39,26 @@ single-device engine's bit for bit, and the coalesced batch cost is
 stacked to a global array it must be nonzero only inside each shard's
 own range, and ``foreign_ops`` counts ops a shard received for buckets
 outside its range (always 0 unless routing is broken).
+
+Re-splittable ranges (the migration layer): ``splits`` generalizes the
+even partition to *arbitrary* contiguous boundaries — shard ``s`` owns
+global buckets ``[splits[s], splits[s+1])`` — by handing the engine the
+range base (``update_parallel(..., nb_global=n_buckets, base=…)``), so
+a key's local bucket is ``global_bucket - base`` instead of the mod
+trick.  :meth:`ShardedDurableMap.rebalance` re-splits a live map under
+a skewed load: it opens a fresh map on the new boundaries and drains
+the old one into it in bounded global-bucket-range rounds — each round
+one ordinary routed ``update`` batch, so every migrated key commits
+with the same O(1) flushes + 2 fences *in its new owner shard* and the
+per-round ``bucket_flushes``/``foreign_ops`` counters prove it.
+:meth:`ShardedDurableMap.migrate_to` is the general form (new capacity
+and/or bucket count and/or boundaries) the membership index's growth
+path runs on.
 """
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -161,27 +176,32 @@ def _squeeze(state: ShardedState) -> batched.HashMapState:
 
 
 @lru_cache(maxsize=None)
-def _build_fns(mesh, S: int, n_buckets: int):
+def _build_fns(mesh, S: int, n_buckets: int, nb_max: int):
     """The jitted shard_map update/lookup closures for one map config —
     cached so every :class:`ShardedDurableMap` instance with the same
-    (mesh, shards, buckets) shares compiles."""
-    nb_local = n_buckets // S
+    (mesh, shards, buckets, max range width) shares compiles.  The split
+    boundaries themselves are *traced operands* (``bounds`` replicated,
+    ``base``/``size`` per-shard), so a rebalanced map re-uses the same
+    compile."""
 
-    def update_local(state, ops, ks, vs, valid):
-        me = jax.lax.axis_index(AXIS)
+    def update_local(state, ops, ks, vs, valid, bounds, base, size):
         st = _squeeze(state)
-        owner = batched.bucket_of(ks, n_buckets) // nb_local
+        base_me, size_me = base[0], size[0]
+        owner = (jnp.searchsorted(
+            bounds, batched.bucket_of(ks, n_buckets), side="right")
+            .astype(jnp.int32) - 1)
         sort_idx, flat = _route(owner, valid, S)
         r_ops, r_ks, r_vs, r_valid_i = _send_packed(
             [ops, ks, vs, valid], sort_idx, flat, S)
         r_valid = r_valid_i.astype(jnp.bool_)
         # routing invariant instrumentation: a shard must never be asked
         # to commit (flush/fence) a bucket outside its own range
-        g = batched.bucket_of(r_ks, n_buckets)
+        g = batched.bucket_of(r_ks, n_buckets) - base_me
         foreign = jnp.sum(
-            r_valid & ((g // nb_local) != me)).astype(jnp.int32)
+            r_valid & ((g < 0) | (g >= size_me))).astype(jnp.int32)
         st2, ok_r, stats = batched.update_parallel(
-            st, r_ops, r_ks, r_vs, nb_local, valid=r_valid)
+            st, r_ops, r_ks, r_vs, nb_max, valid=r_valid,
+            nb_global=n_buckets, base=base_me)
         # hand each op's result back to the shard that holds its slot
         ok = jnp.zeros(ops.shape[0], jnp.bool_).at[sort_idx].set(
             _a2a(ok_r, S)[flat])
@@ -196,20 +216,28 @@ def _build_fns(mesh, S: int, n_buckets: int):
         )
         return ShardedState(*(f[None] for f in st2)), ok, sstats
 
-    def lookup_local(state, ks, valid):
+    def lookup_local(state, ks, valid, bounds, base):
         st = _squeeze(state)
-        owner = batched.bucket_of(ks, n_buckets) // nb_local
+        owner = (jnp.searchsorted(
+            bounds, batched.bucket_of(ks, n_buckets), side="right")
+            .astype(jnp.int32) - 1)
         sort_idx, flat = _route(owner, valid, S)
         r_ks, = _send_packed([ks], sort_idx, flat, S)
-        r_found, r_vals = batched.lookup(st, r_ks, nb_local)
+        # probe, not lookup: exists (node present, live or dead) rides
+        # along for free — the growth path's exact fits check needs it
+        r_exists, r_live, r_vals = batched.probe(
+            st, r_ks, nb_max, nb_global=n_buckets, base=base[0])
         # one packed collective for the answers too
-        back = _a2a(jnp.stack([r_found.astype(jnp.int32), r_vals],
+        back = _a2a(jnp.stack([r_exists.astype(jnp.int32),
+                               r_live.astype(jnp.int32), r_vals],
                               axis=1), S)[flat]
         n = ks.shape[0]
-        found = jnp.zeros(n, jnp.bool_).at[sort_idx].set(
+        exists = jnp.zeros(n, jnp.bool_).at[sort_idx].set(
             back[:, 0].astype(jnp.bool_))
-        vals = jnp.zeros(n, jnp.int32).at[sort_idx].set(back[:, 1])
-        return found, vals
+        found = jnp.zeros(n, jnp.bool_).at[sort_idx].set(
+            back[:, 1].astype(jnp.bool_))
+        vals = jnp.zeros(n, jnp.int32).at[sort_idx].set(back[:, 2])
+        return exists, found, vals
 
     sspec = _state_specs()
     ospec = ShardCommitStats(*([P(AXIS)] * 7))
@@ -217,13 +245,38 @@ def _build_fns(mesh, S: int, n_buckets: int):
     # in jax 0.4.37; every output here is explicitly sharded anyway.
     update_fn = jax.jit(shard_map(
         update_local, mesh=mesh,
-        in_specs=(sspec, P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        in_specs=(sspec, P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(None),
+                  P(AXIS), P(AXIS)),
         out_specs=(sspec, P(AXIS), ospec), check_rep=False))
     lookup_fn = jax.jit(shard_map(
         lookup_local, mesh=mesh,
-        in_specs=(sspec, P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS)), check_rep=False))
+        in_specs=(sspec, P(AXIS), P(AXIS), P(None), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS)), check_rep=False))
     return update_fn, lookup_fn
+
+
+class RebalanceReport(NamedTuple):
+    """What a re-split / migration actually did — and the proof it kept
+    persistence local to the *new* owner ranges."""
+    rounds: int
+    migrated: int               # live keys drained into the new map
+    foreign_ops: int            # Σ over rounds/shards (must be 0)
+    bucket_flushes: np.ndarray  # int32[n_buckets_new] Σ over rounds
+    splits_old: Tuple[int, ...]
+    splits_new: Tuple[int, ...]
+    chain_before: Tuple[int, float]
+    chain_after: Tuple[int, float]
+
+
+def even_splits(n_buckets: int, n_shards: int) -> Tuple[int, ...]:
+    """The default contiguous-range boundaries: ``n_shards`` equal
+    ranges (requires divisibility, like the original static split)."""
+    if n_buckets % n_shards:
+        raise ValueError(
+            f"n_buckets={n_buckets} not divisible by n_shards={n_shards}"
+            " (pass explicit splits= for uneven ranges)")
+    w = n_buckets // n_shards
+    return tuple(s * w for s in range(n_shards)) + (n_buckets,)
 
 
 class ShardedDurableMap:
@@ -232,15 +285,18 @@ class ShardedDurableMap:
 
     ``capacity`` is the *total* node budget (split evenly; each shard
     reserves its own null node 0, so the usable total is
-    ``S·(ceil(capacity/S) - 1)``).  ``n_buckets`` must be divisible by
-    the shard count.  Requires ``n_shards`` jax devices — force host
-    devices for CPU work with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    ``S·(ceil(capacity/S) - 1)``).  ``splits`` (optional, ``S+1``
+    strictly increasing boundaries with ``splits[0]=0`` and
+    ``splits[-1]=n_buckets``) assigns shard ``s`` the contiguous global
+    bucket range ``[splits[s], splits[s+1])``; the default is the even
+    partition (then ``n_buckets`` must be divisible by the shard
+    count).  Requires ``n_shards`` jax devices — force host devices for
+    CPU work with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
 
     def __init__(self, n_shards: Optional[int] = None, *,
                  capacity: int = 1 << 16, n_buckets: int = 1024,
-                 mesh=None):
+                 mesh=None, splits: Optional[Sequence[int]] = None):
         if mesh is None:
             from ..launch.mesh import make_map_mesh
             mesh = make_map_mesh(n_shards or jax.device_count())
@@ -250,20 +306,30 @@ class ShardedDurableMap:
             raise ValueError(
                 f"n_shards={n_shards} does not match the given mesh "
                 f"({self.n_shards} devices); pass one or the other")
-        if n_buckets % self.n_shards:
+        if splits is None:
+            splits = even_splits(n_buckets, self.n_shards)
+        self.splits = tuple(int(b) for b in splits)
+        if (len(self.splits) != self.n_shards + 1
+                or self.splits[0] != 0 or self.splits[-1] != n_buckets
+                or any(a >= b for a, b in zip(self.splits,
+                                              self.splits[1:]))):
             raise ValueError(
-                f"n_buckets={n_buckets} not divisible by "
-                f"n_shards={self.n_shards}")
+                f"splits={splits} must be {self.n_shards + 1} strictly "
+                f"increasing boundaries from 0 to {n_buckets}")
         self.n_buckets = n_buckets
-        self.nb_local = n_buckets // self.n_shards
+        self.sizes = tuple(b - a for a, b in zip(self.splits,
+                                                 self.splits[1:]))
+        self.nb_max = max(self.sizes)       # head width (ranges padded)
+        self.nb_local = self.nb_max         # back-compat alias
+        self.capacity = capacity
         self.cap_local = -(-capacity // self.n_shards)
-        S, C, NBL = self.n_shards, self.cap_local, self.nb_local
+        S, C, NBM = self.n_shards, self.cap_local, self.nb_max
         state = ShardedState(
             key=jnp.zeros((S, C), jnp.int32),
             val=jnp.zeros((S, C), jnp.int32),
-            nxt=jnp.zeros((S, C), jnp.int32),
+            nxt=jnp.full((S, C), batched.NIL, jnp.int32),
             live=jnp.zeros((S, C), jnp.bool_),
-            head=jnp.zeros((S, NBL), jnp.int32),
+            head=jnp.full((S, NBM), batched.NIL, jnp.int32),
             cursor=jnp.ones(S, jnp.int32),
             flushes=jnp.zeros(S, jnp.int32),
             fences=jnp.zeros(S, jnp.int32),
@@ -271,7 +337,14 @@ class ShardedDurableMap:
         self.state = jax.tree_util.tree_map(
             lambda x: jax.device_put(x, NamedSharding(
                 mesh, P(AXIS, *([None] * (x.ndim - 1))))), state)
-        self._update_fn, self._lookup_fn = _build_fns(mesh, S, n_buckets)
+        self._bounds = jnp.asarray(self.splits, jnp.int32)
+        shard1 = NamedSharding(mesh, P(AXIS))
+        self._base = jax.device_put(
+            jnp.asarray(self.splits[:-1], jnp.int32), shard1)
+        self._size = jax.device_put(
+            jnp.asarray(self.sizes, jnp.int32), shard1)
+        self._update_fn, self._lookup_fn = _build_fns(
+            mesh, S, n_buckets, NBM)
 
     # ---------------- host API --------------------------------------- #
     def _pad(self, *arrs: np.ndarray):
@@ -291,7 +364,8 @@ class ShardedDurableMap:
     def update(self, ops, ks, vs) -> Tuple[np.ndarray, ShardCommitStats]:
         """One mixed plan/commit round over the whole map: route each op
         to its owner shard, commit per shard, return per-op ``ok`` in
-        batch order plus the stacked per-shard stats."""
+        batch order plus the stacked per-shard stats (``bucket_flushes``
+        re-assembled on the global bucket axis from the per-range rows)."""
         ops = np.asarray(ops, np.int32)
         ks = np.asarray(ks, np.int32)
         vs = np.asarray(vs, np.int32)
@@ -300,8 +374,20 @@ class ShardedDurableMap:
             return np.zeros(0, np.bool_), None
         (ops_p, ks_p, vs_p), valid = self._pad(ops, ks, vs)
         self.state, ok, stats = self._update_fn(
-            self.state, ops_p, ks_p, vs_p, valid)
+            self.state, ops_p, ks_p, vs_p, valid,
+            self._bounds, self._base, self._size)
+        bf = np.asarray(stats.bucket_flushes).reshape(
+            self.n_shards, self.nb_max)
+        stats = stats._replace(bucket_flushes=np.concatenate(
+            [bf[s, :w] for s, w in enumerate(self.sizes)]))
         return np.asarray(ok)[:n], stats
+
+    def owners_of(self, ks) -> np.ndarray:
+        """Owner shard of each key under the current split (host-side
+        routing twin — used by the index's exact per-shard fits check)."""
+        b = batched.bucket_of_np(np.asarray(ks, np.int32), self.n_buckets)
+        return (np.searchsorted(np.asarray(self.splits), b,
+                                side="right") - 1).astype(np.int32)
 
     def insert(self, ks, vs):
         ks = np.asarray(ks, np.int32)
@@ -315,14 +401,28 @@ class ShardedDurableMap:
 
     def lookup(self, ks) -> Tuple[np.ndarray, np.ndarray]:
         """Batched lookup (the journey — no persistence work on any
-        shard): returns ``(found bool[n], vals int32[n])``."""
+        shard): returns ``(found bool[n], vals int32[n])``.  Exactly
+        :func:`repro.core.batched.lookup`'s contract: a not-found key's
+        val is 0, even when a dead node still holds its last value."""
+        _, found, vals = self.probe(ks)
+        return found, np.where(found, vals, 0).astype(np.int32)
+
+    def probe(self, ks) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Node-level probe across shards (zero persistence work):
+        ``(exists, live, vals)``, where ``exists`` is True iff the key
+        holds a node at all — dead included.  The exact fit check of
+        the index growth path keys off ``exists``: a removed member's
+        node is resurrected in place, never re-allocated."""
         ks = np.asarray(ks, np.int32)
         n = ks.shape[0]
         if n == 0:
-            return np.zeros(0, np.bool_), np.zeros(0, np.int32)
+            z = np.zeros(0, np.bool_)
+            return z, z, np.zeros(0, np.int32)
         (ks_p,), valid = self._pad(ks)
-        found, vals = self._lookup_fn(self.state, ks_p, valid)
-        return np.asarray(found)[:n], np.asarray(vals)[:n]
+        exists, found, vals = self._lookup_fn(self.state, ks_p, valid,
+                                              self._bounds, self._base)
+        return (np.asarray(exists)[:n], np.asarray(found)[:n],
+                np.asarray(vals)[:n])
 
     def items(self) -> dict:
         """Gathered abstract content ``{key: (live, val)}`` — the
@@ -354,13 +454,106 @@ class ShardedDurableMap:
         return int(np.max(jax.device_get(self.state.cursor)))
 
     def chain_stats(self) -> Tuple[int, float]:
-        """Global (max, mean) chain length over all shards' buckets."""
+        """Global (max, mean) chain length over all shards' buckets
+        (each shard contributes only its *owned* range — the padding
+        rows of an uneven split hold no chains and are excluded)."""
         st = jax.device_get(self.state)
-        mxs, means = [], []
-        for s in range(self.n_shards):
+        mx, total = 0, 0.0
+        for s, w in enumerate(self.sizes):
             local = batched.HashMapState(*(f[s] for f in st))
-            mx, mean = batched.chain_stats(
-                jax.tree_util.tree_map(jnp.asarray, local), self.nb_local)
-            mxs.append(int(mx))
-            means.append(float(mean))
-        return max(mxs), float(np.mean(means))
+            local = local._replace(head=local.head[:w])
+            m, mean = batched.chain_stats(
+                jax.tree_util.tree_map(jnp.asarray, local), w)
+            mx = max(mx, int(m))
+            total += float(mean) * w
+        return mx, total / self.n_buckets
+
+    # ---------------- migration over the mesh -------------------------- #
+    def migrate_to(self, *, capacity: Optional[int] = None,
+                   n_buckets: Optional[int] = None,
+                   splits: Optional[Sequence[int]] = None,
+                   buckets_per_round: Optional[int] = None,
+                   ) -> Tuple["ShardedDurableMap", RebalanceReport]:
+        """Drain this map into a fresh one — new boundaries and/or a
+        larger pool and/or a different global bucket count — in bounded
+        rounds of ``buckets_per_round`` *old* global buckets each.
+
+        Every round is one ordinary routed ``update`` on the new map:
+        the drained keys ride the same all_to_all to their new owner
+        shards and commit through the unmodified plan/commit engine, so
+        each migrated key pays O(1) flushes + 2 fences in its new owner
+        range and nothing anywhere else — the per-round stats are summed
+        into the report as the proof (``foreign_ops == 0``;
+        ``bucket_flushes`` nonzero only where the new split says).
+        Returns ``(new_map, report)``; the old map is left frozen (do
+        not write it again)."""
+        nb_new = n_buckets or self.n_buckets
+        if splits is None:
+            if nb_new == self.n_buckets:
+                splits = self.splits
+            elif nb_new % self.n_buckets == 0:
+                # bucket-count growth keeps the split *shape*: scale the
+                # boundaries so each shard keeps its share of the space
+                f = nb_new // self.n_buckets
+                splits = tuple(b * f for b in self.splits)
+            else:
+                # never silently fall back to the even partition: that
+                # would undo a load-weighted rebalance behind the
+                # caller's back (or fail on divisibility mid-migration)
+                raise ValueError(
+                    f"n_buckets={nb_new} is not a multiple of the "
+                    f"current {self.n_buckets}; pass splits= explicitly "
+                    f"to re-shape the ranges")
+        new = ShardedDurableMap(
+            self.n_shards, capacity=capacity or self.capacity,
+            n_buckets=nb_new, mesh=self.mesh, splits=splits)
+        bpr = buckets_per_round or max(1, self.n_buckets // 8)
+        chain_before = self.chain_stats()
+        host = jax.device_get(self.state)
+        # per-shard host views in drain_range's dict form (one shared
+        # chain-walk implementation with the single-device migration)
+        from .migrate import drain_range
+        shard_host = [{f: getattr(host, f)[s] for f in host._fields}
+                      for s in range(self.n_shards)]
+        rounds = migrated = foreign = 0
+        bf_total = np.zeros(new.n_buckets, np.int64)
+        for lo in range(0, self.n_buckets, bpr):
+            hi = min(lo + bpr, self.n_buckets)
+            parts = []
+            for s in range(self.n_shards):      # split order = global
+                a = max(lo, self.splits[s])     # bucket-ascending order
+                b = min(hi, self.splits[s + 1])
+                if a < b:
+                    parts.append(drain_range(
+                        shard_host[s], a - self.splits[s],
+                        b - self.splits[s]))
+            ks = np.concatenate([p[0] for p in parts])
+            vs = np.concatenate([p[1] for p in parts])
+            rounds += 1
+            if not ks.size:
+                continue
+            ok, stats = new.insert(ks, vs)
+            if not ok.all():
+                raise RuntimeError(
+                    f"rebalance drain overflowed the new pool at "
+                    f"global bucket {lo} (capacity {new.capacity})")
+            migrated += int(ks.size)
+            foreign += int(np.sum(np.asarray(stats.foreign_ops)))
+            bf_total += np.asarray(stats.bucket_flushes)
+        return new, RebalanceReport(
+            rounds=rounds, migrated=migrated, foreign_ops=foreign,
+            bucket_flushes=bf_total.astype(np.int32),
+            splits_old=self.splits, splits_new=new.splits,
+            chain_before=chain_before, chain_after=new.chain_stats())
+
+    def rebalance(self, splits: Sequence[int], *,
+                  buckets_per_round: Optional[int] = None
+                  ) -> RebalanceReport:
+        """Re-split the bucket ranges in place: migrate every chain to
+        its owner under the new boundaries (see :meth:`migrate_to`) and
+        adopt the rebalanced state.  The public handle survives — only
+        the split (and the node placement that proves it) changes."""
+        new, report = self.migrate_to(splits=splits,
+                                      buckets_per_round=buckets_per_round)
+        self.__dict__.update(new.__dict__)
+        return report

@@ -62,7 +62,7 @@ def tiles_from_hashmap(state, n_buckets: int, cap: int):
     vt = np.zeros((n_buckets, cap), np.int32)
     for b in range(n_buckets):
         node, slot = head[b], 0
-        while node != 0:
+        while node >= 0:       # links end at batched.NIL (-1)
             if live[node]:
                 assert slot < cap, "bucket overflow in tile conversion"
                 kt[b, slot] = keys[node]

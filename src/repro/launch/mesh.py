@@ -30,6 +30,35 @@ def make_map_mesh(n_shards: int):
     return jax.make_mesh((n_shards,), ("shards",))
 
 
+def make_map_splits(n_buckets: int, n_shards: int, loads=None):
+    """Contiguous bucket-range boundaries (``n_shards + 1`` ints) for
+    the sharded durable map — the construction half of cross-shard
+    rebalancing (``ShardedDurableMap.rebalance`` consumes these).
+
+    Without ``loads`` this is the even partition.  With ``loads`` (one
+    nonnegative weight per *global* bucket, e.g. per-bucket chain
+    lengths or flush counters from ``ShardCommitStats.bucket_flushes``)
+    the boundaries split the cumulative load into ``n_shards`` equal
+    quantiles, so a skewed key distribution lands ranges of equal
+    *work* rather than equal width.  Every range is kept non-empty."""
+    if loads is None:
+        from ..core.sharded import even_splits
+        return even_splits(n_buckets, n_shards)
+    import numpy as np
+    loads = np.asarray(loads, np.float64)
+    if loads.shape != (n_buckets,):
+        raise ValueError(f"loads must have shape ({n_buckets},)")
+    cum = np.cumsum(loads + 1e-12)        # epsilon: empty buckets still
+    total = cum[-1]                       # advance the quantile walk
+    bounds = [0]
+    for s in range(1, n_shards):
+        b = int(np.searchsorted(cum, total * s / n_shards, side="left"))
+        b = min(max(b, bounds[-1] + 1), n_buckets - (n_shards - s))
+        bounds.append(b)
+    bounds.append(n_buckets)
+    return tuple(bounds)
+
+
 # TPU v5e hardware constants (roofline terms, EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -54,13 +54,35 @@ class _SingleBackend:
         self.capacity = capacity
         self.n_buckets = n_buckets
         self.state = batched.make_state(capacity, n_buckets)
+        self.migrations = 0
 
-    def fits(self, n_fresh: int) -> bool:
-        # cursor counts pool slots already allocated (+1 for null); the
-        # worst case allocates one fresh node per insert.  Removed keys
-        # keep their (dead) nodes until a rebuild, so cursor — not the
-        # member count — is the right fullness measure.
+    def fits(self, ks: np.ndarray) -> bool:
+        """Exact fit check for a batch of fresh-insert keys: only keys
+        without a node (live *or* dead — a removed key keeps its node
+        and is resurrected in place) allocate.  The probe (a device
+        round-trip) only runs when the batch-size upper bound does not
+        already prove fitness — the steady-state cost is one int
+        comparison."""
+        if int(self.state.cursor) + ks.size <= self.capacity:
+            return True
+        ex, _, _ = batched.probe(
+            self.state, jnp.asarray(_pad_pow2(ks)), self.n_buckets)
+        n_fresh = int((~np.asarray(ex)[:ks.size]).sum())
         return int(self.state.cursor) + n_fresh <= self.capacity
+
+    def grow_for(self, ks: np.ndarray) -> None:
+        """Online growth: migrate to a doubled pool (and doubled bucket
+        count — a rehash) in bounded NVTraverse-correct rounds until the
+        batch fits.  Dead nodes are compacted away by the drain, so one
+        doubling usually suffices."""
+        from ..core.migrate import migrate_state
+        while not self.fits(ks):
+            nb_old = self.n_buckets
+            self.capacity *= 2
+            self.n_buckets *= 2
+            self.state, _ = migrate_state(
+                self.state, nb_old, self.capacity, self.n_buckets)
+            self.migrations += 1
 
     def update(self, ops: np.ndarray, ks: np.ndarray):
         pk = jnp.asarray(_pad_pow2(ks))
@@ -89,15 +111,51 @@ class _ShardedBackend:
         from ..core.sharded import ShardedDurableMap
         self.map = ShardedDurableMap(
             n_shards, capacity=capacity, n_buckets=n_buckets, mesh=mesh)
+        self.migrations = 0
 
     @property
     def state(self):
         return self.map.state
 
-    def fits(self, n_fresh: int) -> bool:
-        # conservative: a batch's fresh inserts could in the worst case
-        # all hash into the fullest shard's bucket range
-        return self.map.cursor_max + n_fresh <= self.map.cap_local
+    @property
+    def capacity(self) -> int:
+        return self.map.cap_local * self.map.n_shards
+
+    @property
+    def n_buckets(self) -> int:
+        return self.map.n_buckets
+
+    def fits(self, ks: np.ndarray) -> bool:
+        """Exact *per-shard* fit check: only keys without a node (live
+        or dead — a removed key's node is resurrected in place)
+        allocate, and each one burdens exactly its owner shard, so
+        compare per-shard demand against each shard's own free pool —
+        not the old fullest-shard-times-whole-batch worst case.  The
+        mesh probe only runs when the batch-size upper bound does not
+        already prove fitness."""
+        cursors = np.asarray(self.map.state.cursor)
+        if int(cursors.max()) + ks.size <= self.map.cap_local:
+            return True
+        uniq = np.unique(ks)
+        exists, _, _ = self.map.probe(uniq)
+        fresh = uniq[~exists]
+        if fresh.size == 0:
+            return True
+        demand = np.bincount(self.map.owners_of(fresh),
+                             minlength=self.map.n_shards)
+        return bool((cursors + demand <= self.map.cap_local).all())
+
+    def grow_for(self, ks: np.ndarray) -> None:
+        """Online growth over the mesh: migrate every chain to a map
+        with doubled per-shard pools (and doubled bucket count) via the
+        bounded drain rounds of
+        :meth:`repro.core.sharded.ShardedDurableMap.migrate_to` until
+        the batch fits each owner shard."""
+        while not self.fits(ks):
+            self.map, _ = self.map.migrate_to(
+                capacity=2 * self.map.cap_local * self.map.n_shards,
+                n_buckets=2 * self.map.n_buckets)
+            self.migrations += 1
 
     def update(self, ops: np.ndarray, ks: np.ndarray):
         return self.map.update(ops, ks, ks)
@@ -122,12 +180,14 @@ class MembershipIndex:
     :meth:`update` commits adds *and* removes in one mixed plan/commit
     round (``batched.update_parallel``): removes are logical deletes on
     the durable map, so a removed key's node slot is reclaimed by
-    resurrection if the key ever returns.  The node pool doubles when a
-    batch's fresh inserts would not fit — ``update_parallel`` fails
-    cleanly on exhaustion rather than corrupting chains, but an index
-    must never drop members, so growth happens *before* the commit
-    (dead nodes are dropped by the rebuild, which re-inserts only the
-    live member set).
+    resurrection if the key ever returns.  When a batch's fresh inserts
+    would not fit — checked *exactly*, per owner shard on the sharded
+    backend — the backend grows online: its chains migrate into a
+    doubled (pool × buckets) map via the bounded drain rounds of
+    :mod:`repro.core.migrate` / the sharded ``migrate_to``, before the
+    commit, so an index never drops members (``update_parallel`` fails
+    cleanly on exhaustion rather than corrupting chains) and removed
+    members' dead nodes are compacted away by the drain.
 
     ``n_shards`` (optional) runs the map bucket-range-sharded across
     that many devices (:class:`repro.core.sharded.ShardedDurableMap`)
@@ -156,6 +216,11 @@ class MembershipIndex:
         """The backing map state (single-device ``HashMapState`` or the
         sharded ``ShardedState``)."""
         return self._backend.state
+
+    @property
+    def migrations(self) -> int:
+        """Online growth migrations the backend has run so far."""
+        return self._backend.migrations
 
     @staticmethod
     def _in_range(k: int) -> bool:
@@ -187,26 +252,16 @@ class MembershipIndex:
         dels = np.asarray(sorted(del_set), np.int32)
         if ins.size + dels.size == 0:
             return
-        if not self._backend.fits(ins.size):
-            # rebuild, *checked*: growth capacity is sized by what the
-            # backend actually holds, not the global member count — a
-            # skewed key distribution can overflow one shard of the
-            # sharded backend long before the global total does, so grow
-            # until the live set re-inserts cleanly AND the worst-case
-            # batch (every fresh insert hashing into the fullest shard)
-            # still fits.  Each retry costs one rebuild; growth doubles,
-            # so the loop is O(log) and amortized away.
-            live = np.asarray(sorted(self._members), np.int32)
-            while 1 + live.size + ins.size > self.capacity:
-                self.capacity *= 2      # can't fit even unskewed: jump
-            while True:
-                cand = self._make_backend(self.capacity)
-                rebuilt = (bool(cand.insert(live + 1).all())
-                           if live.size else True)
-                if rebuilt and cand.fits(ins.size):
-                    self._backend = cand
-                    break
-                self.capacity *= 2
+        if not self._backend.fits(ins + 1):
+            # online growth: the backend migrates its chains into a
+            # doubled (pool × buckets) map in bounded NVTraverse-correct
+            # rounds — no stop-the-world rebuild, no re-insert retry
+            # loop.  The fit check is exact (per shard, for the sharded
+            # backend), so growth runs exactly when a shard would
+            # actually overflow; migration drains only live keys, so
+            # removed members' dead nodes are compacted away for free.
+            self._backend.grow_for(ins + 1)
+            self.capacity = self._backend.capacity
         ks = np.concatenate([ins, dels]) + 1
         ops = np.concatenate([
             np.full(ins.size, batched.OP_INSERT, np.int32),

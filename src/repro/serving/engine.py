@@ -49,7 +49,11 @@ class RequestLog:
         bucket-range-sharded durable map
         (:class:`repro.core.sharded.ShardedDurableMap`) across that many
         devices — same exactly-once semantics, commits stay
-        per-shard-local."""
+        per-shard-local.  ``capacity`` is only the *seed* pool size:
+        under live traffic the dedup map grows itself via the bounded
+        migration rounds of :mod:`repro.core.migrate`
+        (:attr:`dedup_migrations` counts the growth events), so a
+        long-running server never hits a dedup ceiling."""
         self.io = StagedIO(Path(root), seed=seed)
         self._dedup = MembershipIndex(capacity, n_buckets=256,
                                       n_shards=shards)
@@ -199,6 +203,14 @@ class RequestLog:
         for r in evict:
             self._results.pop(r, None)
         self._dedup.update(rec, evict)
+
+    @property
+    def dedup_migrations(self) -> int:
+        """Online growth migrations the dedup map has run (observability
+        for the serving path: growth is supposed to be rare and
+        amortized — a hot counter here means the seed capacity or the
+        eviction ``retain`` window is mis-sized)."""
+        return self._dedup.migrations
 
     def is_committed(self, rids: Sequence[int]) -> np.ndarray:
         """Batched exactly-once probe over the dedup map (bool[len(rids)]).

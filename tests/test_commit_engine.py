@@ -369,6 +369,69 @@ def test_commit_stats_bucket_flushes():
     assert np.asarray(stats_f.bucket_flushes).sum() == 0
 
 
+def test_nil_sentinel_never_aliases_a_node():
+    """Regression for the link-sentinel ambiguity: ``make_state`` used
+    to zero-initialize ``nxt``/``head``, making "empty link" and "node
+    index 0" the same value.  Links now end at the explicit ``NIL`` and
+    no chain, on either engine, may ever link *to* slot 0 (the reserved
+    never-allocated slot) — chain-walking code (the migration engine's
+    bucket drains) depends on the distinction."""
+    assert int(B.NIL) == -1
+    st = B.make_state(64, NB)
+    assert (np.asarray(st.nxt) == int(B.NIL)).all()
+    assert (np.asarray(st.head) == int(B.NIL)).all()
+    rng = np.random.default_rng(13)
+    st_o, st_p = B.make_state(512, NB), B.make_state(512, NB)
+    for _ in range(6):
+        ops = jnp.asarray(rng.integers(0, 2, size=40))
+        ks = jnp.asarray(rng.integers(0, 30, size=40))
+        vs = jnp.asarray(rng.integers(0, 1000, size=40))
+        st_o, _ = B.apply(st_o, ops, ks, vs, NB)
+        st_p, _, _ = B.update_parallel(st_p, ops, ks, vs, NB)
+    for st in (st_o, st_p):
+        nxt, head, cur = (np.asarray(st.nxt), np.asarray(st.head),
+                          int(st.cursor))
+        assert (nxt[1:cur] != 0).all(), "a chain links to reserved slot 0"
+        assert (head != 0).all(), "a bucket head points at slot 0"
+        # every chain terminates at NIL within the pool
+        for b in range(NB):
+            node, steps = int(head[b]), 0
+            while node != int(B.NIL):
+                node = int(nxt[node])
+                steps += 1
+                assert steps <= cur, "cycle / runaway chain"
+    assert_states_equal(st_o, st_p, "nil-sentinel rounds")
+
+
+def test_key_zero_roundtrips_on_both_engines():
+    """Key 0 was the canary for the 0-as-null scheme (a chain end looked
+    like a node whose key is 0).  With the NIL sentinel it is an
+    ordinary key: insert, lookup, delete, resurrect — oracle-identical."""
+    ks = jnp.asarray([0, 5, 0, 13])
+    vs = jnp.asarray([10, 50, 11, 130])
+    st_o, ok_o = B.insert(B.make_state(64, 2), ks, vs, 2)
+    st_p, ok_p, _ = B.insert_parallel(B.make_state(64, 2), ks, vs, 2)
+    assert list(np.asarray(ok_o)) == [True, True, False, True]
+    np.testing.assert_array_equal(np.asarray(ok_o), np.asarray(ok_p))
+    assert_states_equal(st_o, st_p, "key 0")
+    f, v = B.lookup(st_p, jnp.asarray([0]), 2)
+    assert bool(f[0]) and int(v[0]) == 10
+    st_p, okd, _ = B.delete_parallel(st_p, jnp.asarray([0]), 2)
+    assert bool(okd[0])
+    f, _ = B.lookup(st_p, jnp.asarray([0]), 2)
+    assert not bool(f[0])
+    st_p, okr, _ = B.insert_parallel(st_p, jnp.asarray([0]),
+                                     jnp.asarray([77]), 2)
+    assert bool(okr[0])
+    f, v = B.lookup(st_p, jnp.asarray([0]), 2)
+    assert bool(f[0]) and int(v[0]) == 77
+    # and the migration drain carries key 0 like any other
+    from repro.core.migrate import migrate_state
+    new, _ = migrate_state(st_p, 2, 64, 4)
+    f, v = B.lookup(new, jnp.asarray([0]), 4)
+    assert bool(f[0]) and int(v[0]) == 77
+
+
 def test_plan_phase_does_no_persistence_work():
     """The journey: planning a batch reads no fence/flush state and the
     failed ops of a commit add nothing to the accounting."""

@@ -1,0 +1,356 @@
+"""Online migration engine (core/migrate.py).
+
+The contract under test: migration is a sequence of bounded
+NVTraverse-correct rounds — bit-identical to an oracle build where it
+can be (pure migration), content-identical under live traffic, and
+crash-recoverable to exactly a round boundary (pre-round or post-round,
+never a torn mix) at *every* frontier position.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import batched as B
+from repro.core.migrate import (MigratingMap, MigrationState, drain_range,
+                                host_state, migrate_state)
+
+NB = 16
+
+
+def assert_states_equal(a, b, ctx=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f} diverged")
+
+
+def seeded_state(n=150, nb=NB, cap=512, deletes=True):
+    st = B.make_state(cap, nb)
+    ks = jnp.arange(1, n + 1)
+    st, _, _ = B.insert_parallel(st, ks, ks * 3, nb)
+    if deletes:     # dead nodes mid-chain: the drain must skip them
+        st, _, _ = B.delete_parallel(st, ks[::5], nb)
+        st, _, _ = B.insert_parallel(st, ks[::10], ks[::10] * 7, nb)
+    return st
+
+
+def test_pure_migration_bit_identical_to_oracle_build():
+    """A quiescent migration is a fresh build: replaying the drained
+    (bucket-order, chain-order) sequence through the sequential oracle
+    must reproduce the migrated table bit for bit — state arrays AND
+    flush/fence accounting."""
+    st = seeded_state()
+    for bpr in (1, 3, NB):       # round size must not matter
+        new, rep = migrate_state(st, NB, 1024, 32, buckets_per_round=bpr)
+        ks, vs = drain_range(host_state(st), 0, NB)
+        oracle, ok = B.insert(B.make_state(1024, 32), jnp.asarray(ks),
+                              jnp.asarray(vs), 32)
+        assert bool(ok.all())
+        assert_states_equal(new, oracle, f"bpr={bpr}")
+        assert rep.migrated == ks.size
+        assert rep.rounds == -(-NB // bpr)
+
+
+def test_migrate_state_drops_dead_nodes_and_rehashes():
+    st = seeded_state()
+    live_before = int(np.asarray(st.live).sum())
+    new, rep = migrate_state(st, NB, 1024, 64)
+    assert int(new.cursor) == 1 + live_before      # compacted
+    mx_old, mean_old = B.chain_stats(st, NB)
+    mx_new, mean_new = B.chain_stats(new, 64)
+    assert float(mean_new) < float(mean_old)       # rehash spread chains
+    # content identical
+    f_old, v_old = B.lookup(st, jnp.arange(1, 200), NB)
+    f_new, v_new = B.lookup(new, jnp.arange(1, 200), 64)
+    np.testing.assert_array_equal(np.asarray(f_old), np.asarray(f_new))
+    np.testing.assert_array_equal(np.asarray(v_old), np.asarray(v_new))
+
+
+def test_migrate_state_overflow_raises():
+    st = seeded_state(deletes=False)
+    with pytest.raises(RuntimeError):
+        migrate_state(st, NB, 64, 32)              # 150 live keys, pool 64
+
+
+def test_lookup_during_migration_new_then_old():
+    """At every frontier position, lookups answer from the merged view;
+    a key deleted (or re-inserted) during migration is owned by the new
+    table even though the old table still holds its stale copy."""
+    m = MigratingMap(capacity=256, n_buckets=NB)
+    ks = np.arange(1, 101, dtype=np.int32)
+    m.insert(ks, ks * 3)
+    m.start_migration(buckets_per_round=1)
+    # user traffic against un-migrated keys: delete 7, overwrite 9
+    assert list(m.delete(np.array([7], np.int32))) == [True]
+    assert list(m.delete(np.array([9], np.int32))) == [True]
+    assert list(m.insert(np.array([9], np.int32),
+                         np.array([999], np.int32))) == [True]
+    model = {int(k): int(k) * 3 for k in ks}
+    del model[7]
+    model[9] = 999
+    while m.migrating:
+        f, v = m.lookup(ks)
+        for k, ff, vv in zip(ks, f, v):
+            assert bool(ff) == (int(k) in model), (m.frontier, k)
+            if ff:
+                assert int(vv) == model[int(k)], (m.frontier, k)
+        m.migrate_round()
+    # after the swap the stale old copies of 7/9 are gone for good
+    f, v = m.lookup(np.array([7, 9], np.int32))
+    assert list(f) == [False, True] and int(v[1]) == 999
+    live = {k: v for k, (l, v) in m.items().items() if l}
+    assert live == model
+
+
+def test_dead_in_new_vetoes_live_in_old():
+    """The new-authoritative rule specifically: a key whose only new-
+    table node is DEAD (deleted during migration) must not be
+    resurrected by its old live copy — neither by lookups nor by the
+    drain of its bucket."""
+    m = MigratingMap(capacity=256, n_buckets=NB)
+    ks = np.arange(1, 51, dtype=np.int32)
+    m.insert(ks, ks * 3)
+    m.start_migration(buckets_per_round=1)
+    m.delete(ks)                     # kill everything mid-migration
+    f, _ = m.lookup(ks)
+    assert not f.any()
+    while m.migrating:               # drains must all be filtered out
+        m.migrate_round()
+    f, _ = m.lookup(ks)
+    assert not f.any()
+    assert all(not l for l, _ in m.items().values())
+
+
+def test_growth_is_invisible_to_op_results():
+    """ok flags across a growth event equal a single big-pool engine run
+    (growth never fails an op that would fit an unbounded pool)."""
+    rng = np.random.default_rng(2)
+    m = MigratingMap(capacity=32, n_buckets=8, rounds_per_update=1)
+    big = B.make_state(1 << 14, 8)
+    for rnd in range(25):
+        n = int(rng.integers(8, 48))
+        ops = rng.integers(0, 2, size=n).astype(np.int32)
+        ks = rng.integers(0, 300, size=n).astype(np.int32)
+        vs = rng.integers(0, 1000, size=n).astype(np.int32)
+        ok = m.update(ops, ks, vs)
+        big, ok_big, _ = B.update_parallel(
+            big, jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs), 8)
+        np.testing.assert_array_equal(ok, np.asarray(ok_big),
+                                      err_msg=f"round {rnd}")
+    assert m.migrations_completed >= 1
+    from repro.core.sharded import items_of_state
+    live_big = {k: v for k, (l, v) in items_of_state(big).items() if l}
+    live_m = {k: v for k, (l, v) in m.items().items() if l}
+    assert live_m == live_big
+
+
+# --------------------------------------------------------------------- #
+# crash recovery                                                         #
+# --------------------------------------------------------------------- #
+def _run_to_crash(root, crash_after_rounds, seed_n=40):
+    """Seed, start a migration, crash after exactly N rounds; returns
+    the reference (new-table state, frontier) at each boundary."""
+    m = MigratingMap(capacity=128, n_buckets=8, root=root,
+                     buckets_per_round=1)
+    ks = np.arange(1, seed_n + 1, dtype=np.int32)
+    m.insert(ks, ks * 5)
+    m.delete(ks[::4])
+    m.start_migration()
+    r = 0
+    while m.migrating:
+        if r == crash_after_rounds:
+            m.crash()
+            return None
+        m.migrate_round()
+        r += 1
+    m.crash()
+    return m
+
+
+def _reference_boundaries(tmp_path, seed_n=40):
+    m = MigratingMap(capacity=128, n_buckets=8,
+                     root=tmp_path / "ref", buckets_per_round=1)
+    ks = np.arange(1, seed_n + 1, dtype=np.int32)
+    m.insert(ks, ks * 5)
+    m.delete(ks[::4])
+    m.start_migration()
+    bounds = []
+    while m.migrating:
+        bounds.append((m.frontier, m._mig["new"]))
+        m.migrate_round()
+    bounds.append((8, m.state))
+    return bounds
+
+
+@pytest.mark.parametrize("crash_round", list(range(9)))
+def test_crash_replay_every_frontier(tmp_path, crash_round):
+    """Kill the process between migration rounds at every frontier
+    position: recovery must land bit-identical on a round boundary —
+    the journal's last published round — never a torn mix, and
+    resuming from the recovered frontier must finish to the same final
+    table as the uninterrupted run."""
+    bounds = _reference_boundaries(tmp_path)
+    n_rounds = len(bounds) - 1                      # 8 drain rounds
+    root = tmp_path / f"crash{crash_round}"
+    if crash_round < n_rounds:
+        _run_to_crash(root, crash_round)
+        rec = MigratingMap.recover(root)
+        assert rec.migrating and rec.frontier == bounds[crash_round][0]
+        assert_states_equal(rec._mig["new"], bounds[crash_round][1],
+                            f"recovered new table, round {crash_round}")
+        rec.run_migration()
+    else:                                           # crash after DONE
+        _run_to_crash(root, crash_round)
+        rec = MigratingMap.recover(root)
+        assert not rec.migrating
+    assert_states_equal(rec.state, bounds[-1][1],
+                        f"final state via crash at {crash_round}")
+
+
+def test_crash_with_user_rounds_replays_mixed_journal(tmp_path):
+    """User traffic during migration is journaled too: recovery replays
+    the interleaved drain + pull/user rounds and lands on the exact
+    merged state."""
+    m = MigratingMap(capacity=128, n_buckets=8, root=tmp_path,
+                     buckets_per_round=2)
+    ks = np.arange(1, 41, dtype=np.int32)
+    m.insert(ks, ks * 5)
+    m.start_migration()
+    m.migrate_round()
+    m.delete(np.array([1, 2, 3], np.int32))
+    m.insert(np.array([100, 2], np.int32), np.array([7, 8], np.int32))
+    ref_new = m._mig["new"]
+    ref_frontier = m.frontier
+    m.crash()
+    rec = MigratingMap.recover(tmp_path)
+    assert rec.migrating and rec.frontier == ref_frontier
+    assert_states_equal(rec._mig["new"], ref_new, "mixed journal")
+    rec.run_migration()
+    live = {k: v for k, (l, v) in rec.items().items() if l}
+    assert live[100] == 7 and live[2] == 8 and 1 not in live
+
+
+def test_unfenced_round_is_lost_fenced_round_survives(tmp_path):
+    """The journal commit point is the atomic publish: a crash that
+    loses the staging area rolls back exactly to the last published
+    round."""
+    m = MigratingMap(capacity=128, n_buckets=8, root=tmp_path,
+                     buckets_per_round=1)
+    m.insert(np.arange(1, 31, dtype=np.int32),
+             np.arange(1, 31, dtype=np.int32))
+    m.start_migration()
+    m.migrate_round()
+    pre = m._mig["new"]
+    # hand-stage round bytes without fencing/publishing = mid-round crash
+    m.io.write("mig_0001/round.tmp", b"torn")
+    m.crash()
+    rec = MigratingMap.recover(tmp_path)
+    assert rec.frontier == 1
+    assert_states_equal(rec._mig["new"], pre, "unfenced round leaked")
+
+
+def test_migration_state_header_roundtrip():
+    h = MigrationState(phase="migrating", frontier=3, old=(128, 8),
+                       new=(512, 16), buckets_per_round=2, n_rounds=5)
+    assert MigrationState.from_bytes(h.to_bytes()) == h
+
+
+@pytest.mark.slow
+def test_acceptance_8c_growth_under_live_mixed_traffic():
+    """Acceptance criterion (single-device half): a map seeded at
+    capacity C absorbs 8C inserts under live mixed traffic via
+    migration rounds; the final state is content-identical to an oracle
+    of the same live set, and replaying the stream through a fresh
+    big-pool engine agrees op for op."""
+    C = 1024
+    rng = np.random.default_rng(11)
+    m = MigratingMap(capacity=C, n_buckets=64, rounds_per_update=2)
+    model = {}
+    next_key = 1
+    inserted = 0
+    while inserted < 8 * C:
+        n_ins, n_upd = 192, 64
+        ks_ins = np.arange(next_key, next_key + n_ins, dtype=np.int32)
+        next_key += n_ins
+        inserted += n_ins
+        ks_upd = rng.integers(1, next_key, size=n_upd).astype(np.int32)
+        ops = np.concatenate([np.zeros(n_ins, np.int32),
+                              rng.integers(0, 2, n_upd).astype(np.int32)])
+        ks = np.concatenate([ks_ins, ks_upd])
+        vs = (ks * 3 + 1).astype(np.int32)
+        ok = m.update(ops, ks, vs)
+        for o, k, v, okk in zip(ops, ks, vs, ok):
+            k = int(k)
+            if o == B.OP_INSERT:
+                assert bool(okk) == (k not in model)
+                if okk:
+                    model[k] = int(v)
+            else:
+                assert bool(okk) == (k in model)
+                model.pop(k, None)
+    assert m.migrations_completed >= 3          # 8x growth, 2x per step
+    assert m.capacity >= 8 * C
+    items = m.items()
+    live = {k: v for k, (l, v) in items.items() if l}
+    assert live == model
+    # the final table also answers a full scan correctly
+    probe = np.arange(1, next_key, dtype=np.int32)
+    f, v = m.lookup(probe)
+    np.testing.assert_array_equal(
+        f, np.asarray([int(k) in model for k in probe]))
+
+
+# --------------------------------------------------------------------- #
+# hypothesis: interleaved user ops + migration rounds                    #
+# --------------------------------------------------------------------- #
+def _interleaved_body(events):
+    """Any interleaving of user batches, explicit migration starts, and
+    migration rounds observes dict semantics at every step."""
+    m = MigratingMap(capacity=16, n_buckets=4, rounds_per_update=1,
+                     buckets_per_round=1)
+    model = {}
+    for kind, k, v in events:
+        if kind == "start" and not m.migrating:
+            m.start_migration()
+        elif kind == "round" and m.migrating:
+            m.migrate_round()
+        elif kind == "ins":
+            ok = m.insert(np.array([k], np.int32),
+                          np.array([v], np.int32))
+            assert bool(ok[0]) == (k not in model)
+            if ok[0]:
+                model[k] = v
+        elif kind == "del":
+            ok = m.delete(np.array([k], np.int32))
+            assert bool(ok[0]) == (k in model)
+            model.pop(k, None)
+        f, vals = m.lookup(np.arange(40, dtype=np.int32))
+        for kk in range(40):
+            assert bool(f[kk]) == (kk in model)
+            if f[kk]:
+                assert int(vals[kk]) == model[kk]
+    live = {k: v for k, (l, v) in m.items().items() if l}
+    assert live == model
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(
+        st.tuples(st.sampled_from(["ins", "del", "round", "start"]),
+                  st.integers(0, 39), st.integers(0, 99)),
+        min_size=1, max_size=40))
+    def test_interleaved_ops_and_rounds_match_dict_model(events):
+        _interleaved_body(events)
+except ImportError:      # hypothesis optional: keep a fixed-trace probe
+    def test_interleaved_ops_and_rounds_match_dict_model():
+        rng = np.random.default_rng(4)
+        kinds = ["ins", "del", "round", "start"]
+        events = [(kinds[int(rng.integers(0, 4))],
+                   int(rng.integers(0, 40)), int(rng.integers(0, 100)))
+                  for _ in range(40)]
+        _interleaved_body(events)

@@ -255,6 +255,30 @@ def test_request_log_evict_round_and_restart_replay(tmp_path):
     assert log2.committed()[1] == [9]
 
 
+def test_request_log_dedup_grows_under_live_traffic(tmp_path):
+    """The dedup map's seed capacity is only a starting point: a rid
+    stream far past it grows the index online via migration rounds
+    (no stop-the-world rebuild path left), keeps exactly-once intact
+    across the growth events, and a restarted instance replays the log
+    into its own (re-grown) map with identical answers."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path, capacity=16)
+    rid = 0
+    for _ in range(20):                      # 320 rids through a 16-pool
+        log.commit({rid + i: [rid + i] for i in range(16)})
+        rid += 16
+    assert log.dedup_migrations >= 1
+    assert bool(log.is_committed(range(rid)).all())
+    assert not log.is_committed([rid, rid + 1]).any()
+    # evictions during growth keep the exactly-once window consistent
+    log.commit({rid: [1]}, evict=list(range(100)))
+    got = log.is_committed(list(range(104)) + [rid])
+    assert not got[:100].any() and got[100:].all()
+    log2 = RequestLog(tmp_path, capacity=16)     # restart: same answers
+    np.testing.assert_array_equal(
+        log2.is_committed(list(range(104)) + [rid]), got)
+
+
 def test_serve_retention_evicts_old_rids(setup, tmp_path):
     """retain=N bounds the exactly-once window: rids from *earlier* calls
     are evicted from the dedup index in the same commit round as new

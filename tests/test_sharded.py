@@ -82,8 +82,15 @@ def test_single_shard_homogeneous_wrappers():
     np.testing.assert_array_equal(vals, ks * 3)
     ok, _ = m.delete(np.array([1, 1, 999], np.int32))
     assert list(ok) == [True, False, False]
-    found, _ = m.lookup(np.array([1], np.int32))
+    found, vals = m.lookup(np.array([1], np.int32))
     assert not found[0]
+    # batched.lookup's exact contract: not-found val is 0 even though
+    # the dead node still holds the old value (probe exposes that)
+    assert int(vals[0]) == 0
+    exists, live, pv = m.probe(np.array([1, 2, 999], np.int32))
+    assert list(exists) == [True, True, False]
+    assert list(live) == [False, True, False]
+    assert int(pv[1]) == 6
 
 
 @_need(2)
@@ -180,6 +187,25 @@ def test_sharded_index_growth_under_skewed_keys():
 
 
 @_need(2)
+def test_sharded_index_resurrect_does_not_trigger_growth():
+    """The exact fits check must know that a removed key's node is
+    resurrected in place: filling the pool, removing members, and
+    re-adding them allocates nothing — and therefore must not run a
+    spurious growth migration."""
+    from repro.persistence.index import MembershipIndex
+
+    idx = MembershipIndex(capacity=64, n_buckets=128, n_shards=2)
+    keys = list(range(100, 160))           # fills most of the 2x32 pools
+    for i in range(0, len(keys), 16):
+        idx.add(keys[i:i + 16])
+    grown = idx.migrations
+    idx.remove(keys[:40])
+    idx.add(keys[:40])                     # pure resurrection round
+    assert idx.migrations == grown, "resurrects were counted as fresh"
+    assert bool(idx.contains(keys).all())
+
+
+@_need(2)
 def test_sharded_membership_index_and_requestlog(tmp_path):
     from repro.persistence.index import MembershipIndex
     from repro.serving.engine import RequestLog
@@ -204,6 +230,203 @@ def test_sharded_membership_index_and_requestlog(tmp_path):
     log2 = RequestLog(tmp_path, shards=2)
     assert list(log2.is_committed([1, 2, 3])) == [False, True, True]
     assert log2.committed() == {2: [20], 3: [30]}
+
+
+def test_make_map_splits_even_and_load_weighted():
+    from repro.launch.mesh import make_map_splits
+
+    assert make_map_splits(64, 4) == (0, 16, 32, 48, 64)
+    with pytest.raises(ValueError):
+        make_map_splits(63, 2)
+    # all the load in the first 8 buckets → shard 0's range shrinks to
+    # them and the cold remainder spreads over the other shards
+    loads = np.zeros(64)
+    loads[:8] = 100.0
+    s = make_map_splits(64, 4, loads=loads)
+    assert s[0] == 0 and s[-1] == 64
+    assert all(a < b for a, b in zip(s, s[1:]))     # non-empty ranges
+    assert s[1] <= 8                                # hot range isolated
+    with pytest.raises(ValueError):
+        make_map_splits(64, 4, loads=np.zeros(63))
+
+
+def test_single_shard_uneven_splits_rejected_and_accepted():
+    with pytest.raises(ValueError):
+        ShardedDurableMap(1, capacity=256, n_buckets=NB,
+                          splits=(0, 10, NB))      # wrong boundary count
+    m = ShardedDurableMap(1, capacity=256, n_buckets=NB, splits=(0, NB))
+    ks = np.arange(1, 51, dtype=np.int32)
+    ok, _ = m.insert(ks, ks)
+    assert ok.all()
+
+
+def test_rebalance_single_shard_roundtrip():
+    """1-shard rebalance exercises the full drain/route/commit pipeline
+    everywhere: content preserved, locality counters clean, chains
+    compacted (dead nodes dropped by the drain)."""
+    m = ShardedDurableMap(1, capacity=2048, n_buckets=NB)
+    ks = np.arange(1, 301, dtype=np.int32)
+    m.insert(ks, ks * 3)
+    m.delete(ks[::3])
+    before = {k: v for k, (l, v) in m.items().items() if l}
+    rep = m.rebalance((0, NB), buckets_per_round=5)
+    assert rep.foreign_ops == 0
+    assert rep.migrated == len(before)
+    after = {k: v for k, (l, v) in m.items().items() if l}
+    assert after == before
+    assert rep.chain_after[1] <= rep.chain_before[1]   # compaction
+    # the map keeps serving correctly post-rebalance
+    f, v = m.lookup(ks)
+    exp = np.asarray([int(k) in before for k in ks])
+    np.testing.assert_array_equal(f, exp)
+
+
+@_need(2)
+def test_rebalance_uneven_splits_content_and_locality():
+    """Re-split a live map onto uneven boundaries: per-key content is
+    preserved, every migrated flush lands inside its *new* owner range
+    (foreign_ops == 0; per-shard flush totals equal their own-range
+    sums), and subsequent mixed rounds still match the single-device
+    engine op-for-op."""
+    S = 2 if jax.device_count() < 4 else 4
+    m = ShardedDurableMap(S, capacity=4096, n_buckets=NB)
+    ref = B.make_state(4096, NB)
+    rng = np.random.default_rng(21)
+    for _ in range(4):
+        n = 90
+        ops = rng.integers(0, 2, size=n).astype(np.int32)
+        ks = rng.integers(0, 180, size=n).astype(np.int32)
+        vs = rng.integers(0, 1000, size=n).astype(np.int32)
+        ref, ok_r, _ = B.update_parallel(
+            ref, jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs), NB)
+        ok_s, _ = m.update(ops, ks, vs)
+        np.testing.assert_array_equal(np.asarray(ok_r), ok_s)
+    live_ref = {k: v for k, (l, v) in items_of_state(ref).items() if l}
+    splits = ((0, 12, NB) if S == 2 else (0, 6, 12, 40, NB))
+    rep = m.rebalance(splits, buckets_per_round=7)
+    assert m.splits == splits
+    assert rep.foreign_ops == 0
+    live_m = {k: v for k, (l, v) in m.items().items() if l}
+    assert live_m == live_ref
+    # every migrated key flushed exactly twice, in its own global bucket
+    exp = np.zeros(NB, np.int64)
+    np.add.at(exp, B.bucket_of_np(
+        np.asarray(sorted(live_ref), np.int32), NB), 2)
+    np.testing.assert_array_equal(rep.bucket_flushes, exp)
+    # post-rebalance traffic: ok flags + lookups still engine-identical,
+    # per-shard flushes confined to the new (uneven) owner ranges
+    for _ in range(3):
+        n = 80
+        ops = rng.integers(0, 2, size=n).astype(np.int32)
+        ks = rng.integers(0, 220, size=n).astype(np.int32)
+        vs = rng.integers(0, 1000, size=n).astype(np.int32)
+        ref, ok_r, _ = B.update_parallel(
+            ref, jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs), NB)
+        ok_s, stats = m.update(ops, ks, vs)
+        np.testing.assert_array_equal(np.asarray(ok_r), ok_s)
+        assert int(np.sum(np.asarray(stats.foreign_ops))) == 0
+        bf = np.asarray(stats.bucket_flushes)
+        for s in range(S):
+            lo, hi = splits[s], splits[s + 1]
+            assert int(np.asarray(stats.coalesced_flushes)[s]) == \
+                int(bf[lo:hi].sum())
+    q = rng.integers(0, 260, size=128).astype(np.int32)
+    f_r, v_r = B.lookup(ref, jnp.asarray(q), NB)
+    f_s, v_s = m.lookup(q)
+    np.testing.assert_array_equal(np.asarray(f_r), f_s)
+    np.testing.assert_array_equal(np.asarray(v_r) * np.asarray(f_r),
+                                  v_s * f_s)
+
+
+@_need(2)
+def test_migrate_to_growth_and_rehash_over_mesh():
+    """Capacity + bucket-count growth through the mesh migration path:
+    the split shape scales with the bucket space, content survives, and
+    the rehash shortens chains."""
+    m = ShardedDurableMap(2, capacity=1024, n_buckets=NB)
+    ks = np.arange(1, 401, dtype=np.int32)
+    m.insert(ks, ks * 7)
+    m.delete(ks[::4])
+    live = {k: v for k, (l, v) in m.items().items() if l}
+    new, rep = m.migrate_to(capacity=4096, n_buckets=2 * NB)
+    assert new.n_buckets == 2 * NB
+    assert new.splits == tuple(2 * b for b in m.splits)
+    assert rep.foreign_ops == 0
+    assert {k: v for k, (l, v) in new.items().items() if l} == live
+    assert rep.chain_after[1] < rep.chain_before[1]
+
+
+@_need(8)
+def test_eight_shard_rebalance_equivalence():
+    """The multi-device-lane rebalance equivalence shape: 8 shards,
+    duplicate-heavy traffic, a skew-correcting re-split mid-stream
+    (boundaries from the live per-bucket flush loads), then more
+    traffic — op results and final content must track the single-device
+    engine throughout, with zero foreign ops."""
+    from repro.launch.mesh import make_map_splits
+
+    m = ShardedDurableMap(8, capacity=8192, n_buckets=NB)
+    ref = B.make_state(8192, NB)
+    rng = np.random.default_rng(31)
+    loads = np.zeros(NB, np.int64)
+    for _ in range(4):
+        n = 160
+        ops = rng.integers(0, 2, size=n).astype(np.int32)
+        ks = rng.integers(0, 50, size=n).astype(np.int32)  # dup-heavy
+        vs = rng.integers(0, 1000, size=n).astype(np.int32)
+        ref, ok_r, _ = B.update_parallel(
+            ref, jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs), NB)
+        ok_s, stats = m.update(ops, ks, vs)
+        np.testing.assert_array_equal(np.asarray(ok_r), ok_s)
+        loads += np.asarray(stats.bucket_flushes)
+    rep = m.rebalance(make_map_splits(NB, 8, loads=loads))
+    assert rep.foreign_ops == 0
+    assert {k: v for k, (l, v) in m.items().items() if l} == \
+        {k: v for k, (l, v) in items_of_state(ref).items() if l}
+    for rnd in range(4):
+        n = 120
+        ops = rng.integers(0, 2, size=n).astype(np.int32)
+        ks = rng.integers(0, 80, size=n).astype(np.int32)
+        vs = rng.integers(0, 1000, size=n).astype(np.int32)
+        ref, ok_r, _ = B.update_parallel(
+            ref, jnp.asarray(ops), jnp.asarray(ks), jnp.asarray(vs), NB)
+        ok_s, stats = m.update(ops, ks, vs)
+        np.testing.assert_array_equal(np.asarray(ok_r), ok_s,
+                                      err_msg=f"post-rebalance {rnd}")
+        assert int(np.sum(np.asarray(stats.foreign_ops))) == 0
+    q = rng.integers(0, 100, size=256).astype(np.int32)
+    f_r, v_r = B.lookup(ref, jnp.asarray(q), NB)
+    f_s, v_s = m.lookup(q)
+    np.testing.assert_array_equal(np.asarray(f_r), f_s)
+    np.testing.assert_array_equal(np.asarray(v_r) * np.asarray(f_r),
+                                  v_s * f_s)
+
+
+@_need(4)
+def test_acceptance_4shard_8c_growth_under_live_traffic():
+    """Acceptance criterion (sharded half): a 4-shard index seeded at
+    capacity C absorbs 8C inserts under live mixed traffic, growing by
+    mesh migration rounds; every member answer matches a dict model."""
+    from repro.persistence.index import MembershipIndex
+
+    C = 256
+    idx = MembershipIndex(capacity=C, n_buckets=128, n_shards=4)
+    model = set()
+    rng = np.random.default_rng(41)
+    next_key = 1
+    while next_key <= 8 * C:
+        fresh = list(range(next_key, next_key + 64))
+        next_key += 64
+        rem = [int(k) for k in rng.integers(1, next_key, size=16)
+               if int(k) in model]
+        idx.update(add_keys=fresh, remove_keys=rem)
+        model |= set(fresh)
+        model -= set(rem)
+    assert idx.migrations >= 1
+    probe = list(rng.integers(1, next_key + 50, size=500))
+    got = idx.contains(probe)
+    np.testing.assert_array_equal(
+        got, np.asarray([int(k) in model for k in probe]))
 
 
 def test_chain_stats_aggregates_across_shards():

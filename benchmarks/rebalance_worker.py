@@ -1,0 +1,153 @@
+"""Subprocess worker for the ``rebalance_live`` section of ``bench_nvt``.
+
+Run as ``python -m benchmarks.rebalance_worker N_DEV``: forces ``N_DEV``
+host platform devices (the flag must land *before* jax initializes,
+which is why this is a subprocess and not a function of the parent
+bench) and drives a zipf-skewed mixed stream through a
+:class:`repro.core.rebalance.RebalancingShardedMap` with the auto
+policy armed.  The zipf ranks are mapped onto keys *sorted by global
+bucket*, so the hottest keys concentrate in the low bucket ranges —
+the adversarial case for an even split — and the policy must notice
+and re-split under the live stream.
+
+Recorded per device count (merged under
+``BENCH_nvt.json["rebalance_live"][str(N_DEV)]``):
+
+  * ``rebalances`` / ``rounds`` / ``pulls``: how much re-split work the
+    stream triggered and how it was amortized;
+  * ``trigger_imbalance`` → ``final_imbalance``: hottest shard's load
+    over the mean per-shard load (1.0 = balanced) at trigger time vs
+    over a fixed post-stream probe phase on the final boundaries — the
+    re-split must not make balance worse;
+  * ``state_identical``: final per-key content equals BOTH a plain
+    (never-rebalanced) sharded map driven through the identical stream
+    and a python-dict oracle — the live re-split is invisible to
+    semantics;
+  * ``foreign_ops_total`` (must be 0) and ``locality_ok``: every flush
+    of post-rebalance traffic lands inside its new owner range;
+  * ``us_per_op`` for the live map vs ``plain_us_per_op`` for the
+    never-rebalanced reference (the rebalance overhead actually paid).
+"""
+import json
+import os
+import re
+import sys
+import time
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1])
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       os.environ.get("XLA_FLAGS", "")).strip()
+    os.environ["XLA_FLAGS"] = (
+        inherited
+        + f" --xla_force_host_platform_device_count={n_dev}").strip()
+    import numpy as np
+    from repro.core import batched as B
+    from repro.core.rebalance import (AutoRebalancePolicy,
+                                      RebalancingShardedMap)
+    from repro.core.sharded import ShardedDurableMap
+
+    S, NB = n_dev, 128
+    CAP, BATCH, ROUNDS, POST = 1 << 15, 1024, 24, 6
+    rng = np.random.default_rng(5)
+
+    # zipf rank -> key, hottest ranks in the lowest global buckets: the
+    # skew aligns with contiguous ranges, so an even split is maximally
+    # imbalanced and the load-quantile re-plan has something to fix
+    domain = np.arange(1, 20001, dtype=np.int32)
+    by_bucket = domain[np.argsort(B.bucket_of_np(domain, NB),
+                                  kind="stable")]
+
+    def draw(n):
+        ranks = np.minimum(rng.zipf(1.3, size=n), domain.size) - 1
+        return by_bucket[ranks]
+
+    m = RebalancingShardedMap(
+        S, capacity=CAP, n_buckets=NB, rounds_per_update=2,
+        policy=AutoRebalancePolicy(threshold=1.3, min_load=4096,
+                                   check_every=2))
+    plain = ShardedDurableMap(S, capacity=CAP, n_buckets=NB)
+    model = {}
+    t_live = t_plain = 0.0
+    foreign = 0
+    n_ops = 0
+
+    def one_batch():
+        ops = rng.integers(0, 2, BATCH).astype(np.int32)
+        ks = draw(BATCH)
+        vs = rng.integers(0, 1000, BATCH).astype(np.int32)
+        return ops, ks, vs
+
+    for _ in range(ROUNDS):
+        ops, ks, vs = one_batch()
+        n_ops += BATCH
+        t0 = time.perf_counter()
+        ok, stats = m.update(ops, ks, vs)
+        t_live += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ok_p, _ = plain.update(ops, ks, vs)
+        t_plain += time.perf_counter() - t0
+        assert bool((ok == ok_p).all()), "live rebalance changed results"
+        foreign += int(np.sum(np.asarray(stats.foreign_ops)))
+        for o, k, v, okk in zip(ops, ks, vs, ok):
+            if o == B.OP_INSERT and bool(okk):
+                model[int(k)] = int(v)
+            elif o == B.OP_DELETE and bool(okk):
+                model.pop(int(k), None)
+    if m.rebalancing:                    # finish a tail re-split so the
+        m.run_rebalance()                # post phase probes final splits
+
+    # post phase: fixed probe traffic on the final boundaries (policy
+    # disarmed) for the final imbalance + locality numbers
+    m.policy = None
+    locality_ok = True
+    for _ in range(POST):
+        ops, ks, vs = one_batch()
+        n_ops += BATCH
+        t0 = time.perf_counter()
+        ok, stats = m.update(ops, ks, vs)
+        t_live += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ok_p, _ = plain.update(ops, ks, vs)
+        t_plain += time.perf_counter() - t0
+        assert bool((ok == ok_p).all())
+        foreign += int(np.sum(np.asarray(stats.foreign_ops)))
+        bf = np.asarray(stats.bucket_flushes)
+        for s in range(S):
+            lo, hi = m.splits[s], m.splits[s + 1]
+            if int(np.asarray(stats.coalesced_flushes)[s]) != \
+                    int(bf[lo:hi].sum()):
+                locality_ok = False
+        for o, k, v, okk in zip(ops, ks, vs, ok):
+            if o == B.OP_INSERT and bool(okk):
+                model[int(k)] = int(v)
+            elif o == B.OP_DELETE and bool(okk):
+                model.pop(int(k), None)
+
+    live_m = {k: v for k, (l, v) in m.items().items() if l}
+    live_p = {k: v for k, (l, v) in plain.items().items() if l}
+    ident = live_m == live_p == model
+
+    json.dump({
+        "devices": S,
+        "n_buckets": NB,
+        "batch_ops": BATCH,
+        "batches": ROUNDS + POST,
+        "rebalances": m.rebalances_completed,
+        "rounds": m.rounds_total,
+        "pulls": m.pulls_total,
+        "trigger_imbalance": m.last_trigger_imbalance,
+        "final_imbalance": m.imbalance(),
+        "splits_final": list(m.splits),
+        "us_per_op": t_live / n_ops * 1e6,
+        "plain_us_per_op": t_plain / n_ops * 1e6,
+        "state_identical": bool(ident),
+        "foreign_ops_total": foreign,
+        "locality_ok": bool(locality_ok),
+    }, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

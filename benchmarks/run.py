@@ -367,6 +367,27 @@ def bench_nvt_migrate(rows, out_json="BENCH_nvt.json"):
                      f"state_identical={p['state_identical']}"))
 
 
+def _run_worker(module: str, n_dev: int) -> dict:
+    """Run one forced-host-device bench worker subprocess (the
+    ``--xla_force_host_platform_device_count`` flag must land before
+    jax initializes, and this process's jax is already up) and parse
+    its single-JSON-document stdout."""
+    import json
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", module, str(n_dev)],
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        print(proc.stderr, file=sys.stderr)
+        raise RuntimeError(f"{module} ({n_dev} devices) failed")
+    return json.loads(proc.stdout)
+
+
 def bench_nvt_sharded(rows, out_json="BENCH_nvt.json",
                       device_counts=(1, 2, 4, 8)):
     """Sharded durable map vs the single-device plan/commit engine on
@@ -378,25 +399,13 @@ def bench_nvt_sharded(rows, out_json="BENCH_nvt.json",
     persistence-locality counters) merge into ``out_json["sharded"]``.
     """
     import json
-    import os
-    import subprocess
 
     sharded = {}
     for n_dev in device_counts:
         print(f"# sharded worker: {n_dev} host devices...",
               file=sys.stderr)
-        env = dict(os.environ)
-        env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
-                             if env.get("PYTHONPATH") else "src")
-        proc = subprocess.run(
-            [sys.executable, "-m", "benchmarks.sharded_worker",
-             str(n_dev)],
-            capture_output=True, text=True, env=env)
-        if proc.returncode != 0:
-            print(proc.stderr, file=sys.stderr)
-            raise RuntimeError(
-                f"sharded worker ({n_dev} devices) failed")
-        sharded[str(n_dev)] = json.loads(proc.stdout)
+        sharded[str(n_dev)] = _run_worker("benchmarks.sharded_worker",
+                                          n_dev)
     report = _load_report(out_json)
     report["sharded"] = sharded
     with open(out_json, "w") as f:
@@ -409,6 +418,43 @@ def bench_nvt_sharded(rows, out_json="BENCH_nvt.json",
                      f"vs_single={p['single_us_per_op']:.3f}us;"
                      f"state_identical={res['state_identical']};"
                      f"max_chain={p['chain_stats']['max_chain']}"))
+
+
+def bench_nvt_rebalance_live(rows, out_json="BENCH_nvt.json",
+                             device_counts=(2, 4)):
+    """Live cross-shard rebalancing under a zipf-skewed mixed stream
+    (benchmarks/rebalance_worker.py per forced-host-device count): the
+    auto policy must trigger at least one re-split under live traffic,
+    final per-key content must match a never-rebalanced map + a dict
+    oracle, every flush must stay in its owner range, and the final
+    per-shard imbalance must not exceed the trigger imbalance.  Results
+    merge into ``out_json["rebalance_live"]``."""
+    import json
+
+    section = {}
+    for n_dev in device_counts:
+        print(f"# rebalance_live worker: {n_dev} host devices...",
+              file=sys.stderr)
+        section[str(n_dev)] = _run_worker("benchmarks.rebalance_worker",
+                                          n_dev)
+    report = _load_report(out_json)
+    report["rebalance_live"] = {
+        "note": "us_per_op includes the shard_map recompiles a re-split "
+                "forces (new max range width) plus drain rounds, "
+                "amortized over a short stream; plain_us_per_op is the "
+                "never-rebalanced floor on the same traffic",
+        **section,
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# merged rebalance_live section into {out_json}",
+          file=sys.stderr)
+    for n_dev, p in section.items():
+        rows.append((f"nvt,rebalance_live_{n_dev}dev", p["us_per_op"],
+                     f"rebalances={p['rebalances']};"
+                     f"imbalance={p['trigger_imbalance']:.2f}"
+                     f"->{p['final_imbalance']:.2f};"
+                     f"state_identical={p['state_identical']}"))
 
 
 def bench_checkpoint(rows):
@@ -492,8 +538,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
-                         "fig6,hashmap,batched,nvt,migrate,sharded,ckpt,"
-                         "kernels,roofline")
+                         "fig6,hashmap,batched,nvt,migrate,sharded,"
+                         "rebalance_live,ckpt,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -507,6 +553,8 @@ def main() -> None:
         bench_nvt_migrate(rows)
     if only is None or "sharded" in only:
         bench_nvt_sharded(rows)
+    if only is None or "rebalance_live" in only:
+        bench_nvt_rebalance_live(rows)
     if only is None or "ckpt" in only:
         bench_checkpoint(rows)
     if only is None or "kernels" in only:

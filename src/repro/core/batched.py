@@ -125,7 +125,12 @@ def bucket_of(k: jax.Array, n_buckets: int) -> jax.Array:
 def bucket_of_np(k, n_buckets: int):
     """Numpy twin of :func:`bucket_of` for host-side routing decisions
     (migration round planning, per-shard fits checks) — bit-identical to
-    the jitted hash."""
+    the jitted hash.
+
+    >>> bucket_of_np([1, 2, 3], 8).tolist() == \\
+    ...     [int(b) for b in bucket_of(jnp.asarray([1, 2, 3]), 8)]
+    True
+    """
     import numpy as np
     x = np.asarray(k).astype(np.uint32)
     x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
@@ -181,6 +186,36 @@ def lookup(state: HashMapState, ks: jax.Array, n_buckets: int,
         return found, jnp.where(found, state.val[node], 0)
 
     return jax.vmap(one)(ks)
+
+
+def merge_new_old(exists_new, live_new, vals_new, live_old, vals_old):
+    """The migration/rebalance **new-then-old** lookup rule, composed in
+    one place: once a key has *any* node in the new table — live or
+    dead — the new table's word is final (a dead node there means
+    "deleted during migration" and vetoes the old table's stale live
+    copy); only node-less keys fall through to the old table.
+
+    Host-side numpy — the two :func:`probe` results it merges are
+    already on the host in every caller
+    (:meth:`repro.core.migrate.MigratingMap.lookup`, the live mesh
+    rebalance of :mod:`repro.core.rebalance`).  Returns ``(found,
+    vals)`` with :func:`lookup`'s exact contract: a not-found key's val
+    is 0 even when a dead node still holds its last value.
+
+    >>> import numpy as np
+    >>> f, v = merge_new_old(
+    ...     np.array([True, True, False]),      # key 0 deleted in new,
+    ...     np.array([False, True, False]),     # key 1 updated in new,
+    ...     np.array([0, 7, 0]),                # key 2 only in old
+    ...     np.array([True, True, True]),
+    ...     np.array([5, 6, 9]))
+    >>> f.tolist(), v.tolist()
+    ([False, True, True], [0, 7, 9])
+    """
+    import numpy as np
+    found = np.asarray(np.where(exists_new, live_new, live_old), np.bool_)
+    vals = np.where(exists_new, vals_new, vals_old)
+    return found, np.where(found, vals, 0).astype(np.int32)
 
 
 @partial(jax.jit, static_argnames=("n_buckets", "nb_global"))

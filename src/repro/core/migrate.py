@@ -75,7 +75,13 @@ class MigrationState(NamedTuple):
     ``"done"``.  ``frontier``/``n_rounds`` are snapshots *as of the
     header's publish* (0 at start; final values in the ``done``
     header) — live progress is derived from the published round files
-    themselves on recovery, never from a stale header."""
+    themselves on recovery, never from a stale header.
+
+    >>> h = MigrationState(phase="migrating", frontier=3, old=(128, 8),
+    ...                    new=(512, 16), buckets_per_round=2, n_rounds=5)
+    >>> MigrationState.from_bytes(h.to_bytes()) == h
+    True
+    """
     phase: str
     frontier: int          # global old-bucket drain frontier
     old: Tuple[int, int]   # (capacity, n_buckets) of the frozen old pool
@@ -100,6 +106,89 @@ class MigrationReport(NamedTuple):
     migrated: int          # live keys drained into the new table
     skipped: int           # drained keys already owned by the new table
     max_round_batch: int   # largest drain batch (bounded-round proof)
+
+
+# --------------------------------------------------------------------- #
+# durable round machinery (shared by every bounded-round migration)      #
+# --------------------------------------------------------------------- #
+class RoundJournal:
+    """Range/mesh-generic durable round journal.
+
+    Every bounded-round migration in this codebase — the single-device
+    resize/rehash (``mig_NNNN/``, :class:`MigratingMap`) and the live
+    mesh rebalance (``reb_NNNN/``,
+    :class:`repro.core.rebalance.RebalancingShardedMap`) — persists the
+    same three artifacts through a
+    :class:`repro.persistence.manifest.StagedIO`:
+
+    * a frozen-source **snapshot** (``old.npz``), flushed once at start;
+    * a small JSON **header** (``state.json``), published atomically at
+      start and at finish;
+    * numbered **round records** (``round_NNNNNN.npz``), one per
+      committed round, each written flush → fence → atomic publish —
+      the rename is the commit point, so a crash mid-round rolls the
+      journal back to exactly the previous round.
+
+    The journal never interprets the arrays it stores; callers replay
+    them through their own (deterministic) engine on recovery, which is
+    what makes the recovered state bit-identical to a round boundary.
+    """
+
+    def __init__(self, io, dirname: str):
+        self.io = io
+        self.d = dirname
+        self.n_rounds = 0
+
+    def write_snapshot(self, arrays: dict, name: str = "old.npz") -> None:
+        """Flush the frozen drain source (no publish of its own: the
+        header's atomic publish commits the whole start)."""
+        buf = _io.BytesIO()
+        np.savez(buf, **arrays)
+        self.io.write(f"{self.d}/{name}", buf.getvalue())
+        self.io.flush(f"{self.d}/{name}")
+
+    def publish_header(self, payload: bytes) -> None:
+        """flush(header) → fence → atomic publish of ``state.json``."""
+        self.io.write(f"{self.d}/state.tmp", payload)
+        self.io.flush(f"{self.d}/state.tmp")
+        self.io.fence()
+        self.io.publish(f"{self.d}/state.tmp", f"{self.d}/state.json")
+
+    def append(self, **arrays) -> None:
+        """Durably commit one round: flush(record) → fence → publish
+        (the atomic rename is the CAS; a crash before it leaves the
+        journal at the previous round — pre-round state exactly)."""
+        buf = _io.BytesIO()
+        np.savez(buf, **arrays)
+        tmp = f"{self.d}/round.tmp"
+        self.io.write(tmp, buf.getvalue())
+        self.io.flush(tmp)
+        self.io.fence()
+        self.io.publish(tmp, f"{self.d}/round_{self.n_rounds:06d}.npz")
+        self.n_rounds += 1
+
+    @staticmethod
+    def newest_dir(root, prefix: str) -> Optional[str]:
+        """Newest journal dir (``<prefix>_NNNN``) with a published
+        header, or None — crash recovery's entry point."""
+        digs = sorted(p.name for p in Path(root).glob(f"{prefix}_*")
+                      if (p / "state.json").exists())
+        return digs[-1] if digs else None
+
+    @staticmethod
+    def read(root, dirname: str, snapshot: str = "old.npz"):
+        """Load one journal: ``(header bytes, snapshot dict, rounds)``,
+        rounds as dicts in publish order (the replay order)."""
+        root = Path(root)
+        hdr = (root / dirname / "state.json").read_bytes()
+        snap_npz = np.load(
+            _io.BytesIO((root / dirname / snapshot).read_bytes()))
+        snap = {k: np.asarray(snap_npz[k]) for k in snap_npz.files}
+        rounds = []
+        for rp in sorted((root / dirname).glob("round_*.npz")):
+            rec = np.load(_io.BytesIO(rp.read_bytes()))
+            rounds.append({k: np.asarray(rec[k]) for k in rec.files})
+        return hdr, snap, rounds
 
 
 # --------------------------------------------------------------------- #
@@ -231,6 +320,7 @@ class MigratingMap:
             from ..persistence.manifest import StagedIO
             self.io = StagedIO(Path(root), seed=seed)
         self._mig = None           # in-flight migration bookkeeping
+        self._journal = None       # RoundJournal of the in-flight migration
         self._mig_seq = 0          # completed+started migrations (dir name)
         self.migrations_completed = 0
         self.rounds_total = 0
@@ -287,9 +377,8 @@ class MigratingMap:
         m = self._mig
         ex_new, live_new, val_new = _probe_np(m["new"], ks, m["nb_new"])
         _, live_old, val_old = _probe_np(self.state, ks, self.n_buckets)
-        found = np.where(ex_new, live_new, live_old)
-        vals = np.where(ex_new, val_new, val_old).astype(np.int32)
-        return found, np.where(found, vals, 0).astype(np.int32)
+        return B.merge_new_old(ex_new, live_new, val_new,
+                               live_old, val_old)
 
     def items(self) -> dict:
         """Abstract content ``{key: (live, val)}``, new-authoritative."""
@@ -368,11 +457,8 @@ class MigratingMap:
         }
         self._mig_seq += 1
         if self.io is not None:
-            d = self._mig_dir()
-            buf = _io.BytesIO()
-            np.savez(buf, **old_host)
-            self.io.write(f"{d}/old.npz", buf.getvalue())
-            self.io.flush(f"{d}/old.npz")
+            self._journal = RoundJournal(self.io, self._mig_dir())
+            self._journal.write_snapshot(old_host)
             self._publish_header("migrating")
 
     def _mig_dir(self) -> str:
@@ -387,30 +473,18 @@ class MigratingMap:
             buckets_per_round=m["bpr"], n_rounds=m["n_rounds"])
 
     def _publish_header(self, phase: str) -> None:
-        d = self._mig_dir()
-        self.io.write(f"{d}/state.tmp", self._header(phase).to_bytes())
-        self.io.flush(f"{d}/state.tmp")
-        self.io.fence()
-        self.io.publish(f"{d}/state.tmp", f"{d}/state.json")
+        self._journal.publish_header(self._header(phase).to_bytes())
 
     def _journal_round(self, ops, ks, vs, frontier_after: int) -> None:
-        """Durably commit one round: flush(record) → fence → publish
-        (the atomic rename is the CAS; a crash before it leaves the
-        journal at the previous round — pre-round state exactly)."""
+        """Durably commit one round through the shared
+        :class:`RoundJournal` (flush → fence → atomic publish)."""
         m = self._mig
-        if self.io is None:
+        if self._journal is None:
             m["n_rounds"] += 1
             return
-        d = self._mig_dir()
-        buf = _io.BytesIO()
-        np.savez(buf, ops=ops, ks=ks, vs=vs,
-                 frontier=np.int32(frontier_after))
-        tmp = f"{d}/round.tmp"
-        self.io.write(tmp, buf.getvalue())
-        self.io.flush(tmp)
-        self.io.fence()
-        self.io.publish(tmp, f"{d}/round_{m['n_rounds']:06d}.npz")
-        m["n_rounds"] += 1
+        self._journal.append(ops=ops, ks=ks, vs=vs,
+                             frontier=np.int32(frontier_after))
+        m["n_rounds"] = self._journal.n_rounds
 
     def migrate_round(self) -> bool:
         """Drain the next ``buckets_per_round`` old buckets into the new
@@ -477,6 +551,7 @@ class MigratingMap:
             fences=m["new"].fences + self.state.fences)
         self.capacity, self.n_buckets = m["cap_new"], m["nb_new"]
         self._mig = None
+        self._journal = None
         self.migrations_completed += 1
 
     def _commit_migrating(self, ops, ks, vs) -> np.ndarray:
@@ -525,6 +600,7 @@ class MigratingMap:
         self.io.crash(evict="none")
         self.state = None
         self._mig = None
+        self._journal = None
 
     @classmethod
     def recover(cls, root, *, rounds_per_update: int = 1,
@@ -535,27 +611,21 @@ class MigratingMap:
         resume from the recovered frontier.  A ``done`` header recovers
         the completed table; no migration dir recovers an empty map."""
         root = Path(root)
-        digs = sorted(p.name for p in root.glob("mig_*")
-                      if (p / "state.json").exists())
+        d = RoundJournal.newest_dir(root, "mig")
         m = cls(rounds_per_update=rounds_per_update, root=root, seed=seed)
-        if not digs:
+        if d is None:
             return m
-        d = digs[-1]
-        hdr = MigrationState.from_bytes(
-            (root / d / "state.json").read_bytes())
-        old_npz = np.load(_io.BytesIO((root / d / "old.npz").read_bytes()))
-        old_host = {k: np.asarray(old_npz[k]) for k in old_npz.files}
+        hdr_bytes, old_host, rounds = RoundJournal.read(root, d)
+        hdr = MigrationState.from_bytes(hdr_bytes)
         m._mig_seq = int(d.split("_")[1])
         m.capacity, m.n_buckets = hdr.old
         cap_new, nb_new = hdr.new
         new = B.make_state(cap_new, nb_new)
         frontier = 0
         n_rounds = 0
-        for rp in sorted((root / d).glob("round_*.npz")):
-            rec = np.load(_io.BytesIO(rp.read_bytes()))
-            new, ok, _ = _run_batch(new, np.asarray(rec["ops"]),
-                                    np.asarray(rec["ks"]),
-                                    np.asarray(rec["vs"]), nb_new)
+        for rec in rounds:
+            new, ok, _ = _run_batch(new, rec["ops"], rec["ks"],
+                                    rec["vs"], nb_new)
             frontier = max(frontier, int(rec["frontier"]))
             n_rounds += 1
         if hdr.phase == "done":
@@ -579,6 +649,8 @@ class MigratingMap:
             "remaining_live": int(old_host["live"].sum()) - drained,
             "migrated": 0, "skipped": 0,
         }
+        m._journal = RoundJournal(m.io, d)
+        m._journal.n_rounds = n_rounds       # resume the round numbering
         return m
 
 

@@ -1,0 +1,662 @@
+"""Live cross-shard rebalancing: re-split a sharded durable map under
+routed user traffic.
+
+:meth:`repro.core.sharded.ShardedDurableMap.rebalance` moves a live
+map's bucket-range boundaries, but it is *blocking*: no user operation
+can commit while its drain rounds run.  This module lifts the
+single-device online-migration protocol (:mod:`repro.core.migrate`) to
+the mesh, so a skewed load can be re-split while the map keeps serving —
+the last sharding gap in the ROADMAP.
+
+The protocol is the migration protocol, shard-aware:
+
+* **The old map is frozen.**  ``start_rebalance`` snapshots the current
+  :class:`~repro.core.sharded.ShardedDurableMap` (one ``device_get``);
+  from then on every user update commits into the *new* map only, routed
+  by the **new** splits.  The frozen snapshot is a stable drain source
+  for every round.
+* **New is authoritative per key.**  Once a key has any node in the new
+  map — live or dead — the new map's word is final; a dead node there
+  means "deleted during the rebalance" and vetoes the old map's stale
+  live copy.  Drains filter on :meth:`~ShardedDurableMap.probe`'s
+  ``exists``, lookups compose both probes with
+  :func:`repro.core.batched.merge_new_old` (new-then-old).
+* **Drain rounds are ordinary routed updates.**  Each round drains a
+  bounded contiguous *global* bucket range from the frozen snapshot
+  (bucket-ascending, chain head→tail, live nodes only — the canonical
+  order of :func:`repro.core.migrate.drain_range`) and inserts it into
+  the new map through the existing all_to_all + per-shard plan/commit
+  engine, so every migrated key pays O(1) flushes + 2 fences *in its new
+  owner shard* and ``foreign_ops``/``bucket_flushes`` prove it.
+* **User batches pull first.**  A user batch during the rebalance
+  commits as one mixed ``[pull-inserts; user ops]`` round on the new
+  map: each distinct user key live in the old map and node-less in the
+  new is pulled over with its old value first, after which the user's
+  inserts/deletes see exactly the merged map's liveness — identical
+  semantics (ok flags, final content) to running the blocking rebalance
+  first and the same batches after.
+* **Every round is durable.**  With a ``root``, the
+  :class:`RebalanceState` header, the frozen snapshot, and every round
+  (drain *and* user) go through the shared
+  :class:`repro.core.migrate.RoundJournal` (``reb_NNNN/``) with
+  flush → fence → atomic publish.  A crash between rounds recovers by
+  deterministic replay to *exactly* the pre- or post-round state —
+  bit-identical arrays, never a torn mix — and the rebalance resumes
+  from the recovered frontier.
+
+:class:`AutoRebalancePolicy` closes the loop: the map accumulates the
+per-bucket flush counters (``CommitStats.bucket_flushes``) every round,
+and when the hottest shard's share of that load exceeds the policy
+threshold, :func:`repro.launch.mesh.replan_splits` derives
+load-quantile boundaries and a rebalance starts by itself — skewed
+(zipf) streams re-split under live traffic with no operator call.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import batched as B
+from .migrate import RoundJournal, drain_range
+from .sharded import RebalanceReport, ShardedDurableMap
+
+
+class RebalanceState(NamedTuple):
+    """The durable rebalance header — small enough to publish atomically.
+
+    Together with the frozen old-map snapshot and the journaled rounds it
+    fully determines both maps: the engine is deterministic, so replay
+    recovers bit-identical state.  ``frontier``/``n_rounds`` are
+    snapshots as of the header's publish (0 at start; final values in
+    the ``done`` header) — live progress is derived from the published
+    round files on recovery, never from a stale header.
+
+    >>> h = RebalanceState(phase="rebalancing", frontier=8, n_buckets=64,
+    ...                    capacity_old=4096, capacity_new=4096,
+    ...                    splits_old=(0, 32, 64), splits_new=(0, 8, 64),
+    ...                    buckets_per_round=8, n_rounds=1)
+    >>> RebalanceState.from_bytes(h.to_bytes()) == h
+    True
+    """
+    phase: str                    # "rebalancing" | "done"
+    frontier: int                 # global old-bucket drain frontier
+    n_buckets: int
+    capacity_old: int
+    capacity_new: int
+    splits_old: Tuple[int, ...]
+    splits_new: Tuple[int, ...]
+    buckets_per_round: int
+    n_rounds: int                 # journaled rounds (drain + user)
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(self._asdict(), sort_keys=True).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "RebalanceState":
+        d = json.loads(b.decode())
+        d["splits_old"] = tuple(d["splits_old"])
+        d["splits_new"] = tuple(d["splits_new"])
+        return RebalanceState(**d)
+
+
+class AutoRebalancePolicy(NamedTuple):
+    """When to re-split without an operator call.
+
+    Every committed round's ``bucket_flushes`` accumulates into the
+    map's per-global-bucket load counters; every ``check_every``-th
+    steady-state update the policy evaluates them.  A rebalance starts
+    when at least ``min_load`` flushes have accumulated since the last
+    rebalance AND the hottest shard carries more than ``threshold`` ×
+    the mean per-shard load AND the load-quantile re-plan
+    (:func:`repro.launch.mesh.replan_splits`) actually moves a boundary
+    (a single ultra-hot bucket cannot be split further — the re-plan
+    reproducing the current boundaries suppresses the trigger instead of
+    thrashing)."""
+    threshold: float = 1.5
+    min_load: int = 2048
+    check_every: int = 4
+    buckets_per_round: Optional[int] = None
+
+
+def _pending_per_shard(shard_host, splits_old, frontier: int,
+                       new_map: ShardedDurableMap) -> np.ndarray:
+    """Per-*new*-shard count of live old keys not yet drained (global
+    bucket ≥ ``frontier``) — the allocation reserve the fits check holds
+    against user traffic so the remaining drains can never overflow."""
+    remaining = np.zeros(new_map.n_shards, np.int64)
+    for s, (a0, b0) in enumerate(zip(splits_old, splits_old[1:])):
+        a = max(frontier, a0)
+        if a >= b0:
+            continue
+        ks, _ = drain_range(shard_host[s], a - a0, b0 - a0)
+        if ks.size:
+            remaining += np.bincount(new_map.owners_of(ks),
+                                     minlength=new_map.n_shards)
+    return remaining
+
+
+class RebalancingShardedMap:
+    """A :class:`~repro.core.sharded.ShardedDurableMap` that re-splits
+    its bucket ranges *under live traffic* — and, given a policy, by
+    itself.
+
+    Steady state it is a thin wrapper (same
+    ``update``/``insert``/``delete``/``lookup``/``probe`` contracts).
+    During a rebalance, user batches route by the **new** splits and
+    commit pull-first into the new map, lookups are new-then-old, and
+    every ``update()`` first advances ``rounds_per_update`` drain
+    rounds, amortizing the re-split over traffic exactly as
+    :class:`repro.core.migrate.MigratingMap` amortizes growth.
+
+    On completion the new map is adopted as-is — the same contract as
+    the blocking :meth:`~ShardedDurableMap.rebalance` (the frozen old
+    map's flush/fence counters are dropped with it), so a quiescent
+    live rebalance is state-identical to the blocking one.  ``root``
+    makes the rebalance window durable: header + snapshot + every round
+    journaled via :class:`repro.core.migrate.RoundJournal`, and
+    :meth:`recover` rebuilds bit-identical state from a crash between
+    rounds and resumes from the frontier.
+    """
+
+    def __init__(self, n_shards: Optional[int] = None, *,
+                 capacity: int = 1 << 16, n_buckets: int = 1024,
+                 mesh=None, splits: Optional[Sequence[int]] = None,
+                 root=None, seed: int = 0,
+                 buckets_per_round: Optional[int] = None,
+                 rounds_per_update: int = 1,
+                 policy: Optional[AutoRebalancePolicy] = None):
+        self.map = ShardedDurableMap(n_shards, capacity=capacity,
+                                     n_buckets=n_buckets, mesh=mesh,
+                                     splits=splits)
+        self.buckets_per_round = buckets_per_round
+        self.rounds_per_update = rounds_per_update
+        self.policy = policy
+        self.io = None
+        if root is not None:
+            from ..persistence.manifest import StagedIO
+            self.io = StagedIO(Path(root), seed=seed)
+        self._reb = None            # in-flight rebalance bookkeeping
+        self._journal = None        # RoundJournal of the in-flight window
+        self._reb_seq = 0           # completed+started rebalances (dir)
+        self._updates_since_check = 0
+        # per-global-bucket flush load since the last rebalance — what
+        # the auto policy (and replan_splits) read
+        self.loads = np.zeros(n_buckets, np.int64)
+        self.rebalances_completed = 0
+        self.rounds_total = 0       # drain rounds across all rebalances
+        self.migrated_total = 0
+        self.pulls_total = 0
+        self.last_report: Optional[RebalanceReport] = None
+        self.last_trigger_imbalance: Optional[float] = None
+
+    # ---------------- pass-through geometry --------------------------- #
+    @property
+    def n_shards(self) -> int:
+        return self.map.n_shards
+
+    @property
+    def n_buckets(self) -> int:
+        return self.map.n_buckets
+
+    @property
+    def splits(self) -> Tuple[int, ...]:
+        """The *authoritative* boundaries — the new splits as soon as a
+        rebalance opens (ops route by them from that moment on)."""
+        return (self._reb["new"] if self._reb else self.map).splits
+
+    @property
+    def capacity(self) -> int:
+        return (self._reb["new"] if self._reb else self.map).capacity
+
+    @property
+    def cap_local(self) -> int:
+        return (self._reb["new"] if self._reb else self.map).cap_local
+
+    @property
+    def state(self):
+        """The authoritative map's :class:`~repro.core.sharded.ShardedState`
+        (the destination map's, while a rebalance is draining into it)."""
+        return (self._reb["new"] if self._reb else self.map).state
+
+    @property
+    def rebalancing(self) -> bool:
+        return self._reb is not None
+
+    @property
+    def frontier(self) -> Optional[int]:
+        return None if self._reb is None else self._reb["frontier"]
+
+    @property
+    def cursors(self) -> np.ndarray:
+        """Guaranteed-upper-bound per-shard pool usage: the serving
+        map's cursors, plus — during a rebalance — the un-drained live
+        keys still owed to each new shard (the drain reserve)."""
+        if self._reb is None:
+            return self.map.cursors
+        return self._reb["new"].cursors + self._reb["remaining"]
+
+    @property
+    def flushes(self) -> int:
+        f = self.map.flushes
+        if self._reb is not None:
+            f += self._reb["new"].flushes
+        return f
+
+    @property
+    def fences(self) -> int:
+        f = self.map.fences
+        if self._reb is not None:
+            f += self._reb["new"].fences
+        return f
+
+    def owners_of(self, ks) -> np.ndarray:
+        """Owner shards under the authoritative (new-first) split."""
+        return (self._reb["new"] if self._reb else self.map).owners_of(ks)
+
+    def fresh_demand(self, ks) -> np.ndarray:
+        """Per-shard allocation demand of a batch of distinct insert
+        keys, *beyond* what :attr:`cursors`' drain reserve already
+        holds.  Mid-rebalance a key allocates in the new map unless it
+        already has a node there OR is live in the old map (then the
+        reserve covers its pull/drain) — in particular a key whose only
+        node is a *dead* one in the frozen old map does allocate; the
+        merged ``probe``'s ``exists`` would wrongly exclude it."""
+        if self._reb is None:
+            return self.map.fresh_demand(ks)
+        ks = np.asarray(ks, np.int32)
+        new = self._reb["new"]
+        ex_new, _, _ = new.probe(ks)
+        _, live_old, _ = self.map.probe(ks)
+        covered = ex_new | live_old
+        return np.bincount(new.owners_of(ks[~covered]),
+                           minlength=self.n_shards).astype(np.int64)
+
+    def chain_stats(self) -> Tuple[int, float]:
+        """Chain shape of the authoritative map (the destination layout
+        while a rebalance is draining into it)."""
+        return (self._reb["new"] if self._reb else self.map).chain_stats()
+
+    def items(self) -> dict:
+        """Abstract content ``{key: (live, val)}``, new-authoritative."""
+        out = self.map.items()
+        if self._reb is not None:
+            out.update(self._reb["new"].items())
+        return out
+
+    # ---------------- op API ------------------------------------------- #
+    def update(self, ops, ks, vs):
+        """One mixed round in batch order, identical results to a single
+        merged map of unchanged capacity; advances ``rounds_per_update``
+        drain rounds first while a rebalance is in flight, and — with a
+        policy — opens one when the load counters say so.  Returns
+        ``(ok, ShardCommitStats)`` exactly like the plain sharded map."""
+        ops = np.asarray(ops, np.int32)
+        ks = np.asarray(ks, np.int32)
+        vs = np.asarray(vs, np.int32)
+        if self._reb is None:
+            self._maybe_trigger()
+        if self._reb is None:
+            ok, stats = self.map.update(ops, ks, vs)
+            self._note(stats)
+            return ok, stats
+        for _ in range(self.rounds_per_update):
+            if self._reb is not None:
+                self.rebalance_round()
+        if self._reb is None:
+            return self.update(ops, ks, vs)     # finished mid-call
+        return self._commit_rebalancing(ops, ks, vs)
+
+    def insert(self, ks, vs):
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, B.OP_INSERT, np.int32),
+                           ks, vs)
+
+    def delete(self, ks):
+        ks = np.asarray(ks, np.int32)
+        return self.update(np.full(ks.shape, B.OP_DELETE, np.int32),
+                           ks, np.zeros_like(ks))
+
+    def probe(self, ks):
+        """Merged node-level probe ``(exists, live, vals)`` — the new
+        map's node (live or dead) shadows the old map's."""
+        if self._reb is None:
+            return self.map.probe(ks)
+        ex_n, live_n, val_n = self._reb["new"].probe(ks)
+        ex_o, live_o, val_o = self.map.probe(ks)
+        return (ex_n | ex_o, np.where(ex_n, live_n, live_o),
+                np.where(ex_n, val_n, val_o).astype(np.int32))
+
+    def lookup(self, ks):
+        """New-then-old batched lookup (zero persistence work); exactly
+        :func:`repro.core.batched.lookup`'s contract."""
+        if self._reb is None:
+            return self.map.lookup(ks)
+        ex_n, live_n, val_n = self._reb["new"].probe(ks)
+        _, live_o, val_o = self.map.probe(ks)
+        return B.merge_new_old(ex_n, live_n, val_n, live_o, val_o)
+
+    # ---------------- the auto policy ---------------------------------- #
+    def _note(self, stats) -> None:
+        if stats is None:
+            return
+        self.loads += np.asarray(stats.bucket_flushes, np.int64)
+        self._updates_since_check += 1
+
+    def _maybe_trigger(self) -> None:
+        p = self.policy
+        if p is None or self._updates_since_check < p.check_every:
+            return
+        self._updates_since_check = 0
+        if int(self.loads.sum()) < p.min_load:
+            return
+        from ..launch.mesh import replan_splits
+        new_splits, imbalance = replan_splits(
+            self.map.splits, self.loads, threshold=p.threshold)
+        if new_splits is None:
+            return
+        try:
+            self.start_rebalance(new_splits,
+                                 buckets_per_round=p.buckets_per_round)
+        except ValueError:
+            # flush load ≠ live-key placement: the quantile plan can
+            # pack more live keys into one new shard than its pool
+            # holds.  The auto path must never crash a user update —
+            # decline, and re-plan only after fresh load accumulates
+            # (an explicit start_rebalance still raises).
+            self.loads[:] = 0
+            return
+        self.last_trigger_imbalance = imbalance
+
+    def imbalance(self) -> float:
+        """Hottest shard's share of the accumulated load, normalized so
+        1.0 is perfect balance (what the policy thresholds)."""
+        from ..launch.mesh import replan_splits
+        return replan_splits(self.splits, self.loads,
+                             threshold=float("inf"))[1]
+
+    # ---------------- rebalance control -------------------------------- #
+    def start_rebalance(self, splits: Sequence[int], *,
+                        capacity: Optional[int] = None,
+                        buckets_per_round: Optional[int] = None) -> None:
+        """Freeze the current map as the drain source, open an empty map
+        on the new boundaries, and durably publish the
+        :class:`RebalanceState` header (phase=rebalancing, frontier=0)
+        plus the frozen snapshot."""
+        if self._reb is not None:
+            raise RuntimeError("rebalance already in flight")
+        new = ShardedDurableMap(
+            self.map.n_shards, capacity=capacity or self.map.capacity,
+            n_buckets=self.map.n_buckets, mesh=self.map.mesh,
+            splits=splits)
+        host = jax.device_get(self.map.state)
+        shard_host = [{f: np.asarray(getattr(host, f)[s])
+                       for f in host._fields}
+                      for s in range(self.map.n_shards)]
+        remaining = _pending_per_shard(shard_host, self.map.splits, 0, new)
+        if not bool((1 + remaining <= new.cap_local).all()):
+            raise ValueError(
+                f"splits {tuple(splits)} cannot hold the live content: "
+                f"per-shard demand {remaining.tolist()} vs per-shard "
+                f"pool {new.cap_local - 1}")
+        bpr = (buckets_per_round or self.buckets_per_round
+               or max(1, self.map.n_buckets // 8))
+        self._reb = {
+            "new": new, "frontier": 0, "bpr": bpr, "n_rounds": 0,
+            "drain_rounds": 0, "shard_host": shard_host,
+            "remaining": remaining, "migrated": 0, "skipped": 0,
+            "foreign": 0, "bf": np.zeros(self.map.n_buckets, np.int64),
+            "splits_old": self.map.splits,
+            "chain_before": self.map.chain_stats(),
+        }
+        self._reb_seq += 1
+        if self.io is not None:
+            self._journal = RoundJournal(self.io, self._reb_dir())
+            self._journal.write_snapshot(
+                {f: np.asarray(getattr(host, f)) for f in host._fields})
+            self._publish_header("rebalancing")
+
+    def _reb_dir(self) -> str:
+        return f"reb_{self._reb_seq:04d}"
+
+    def _header(self, phase: str) -> RebalanceState:
+        r = self._reb
+        return RebalanceState(
+            phase=phase, frontier=r["frontier"],
+            n_buckets=self.map.n_buckets,
+            capacity_old=self.map.capacity,
+            capacity_new=r["new"].capacity,
+            splits_old=r["splits_old"], splits_new=r["new"].splits,
+            buckets_per_round=r["bpr"], n_rounds=r["n_rounds"])
+
+    def _publish_header(self, phase: str) -> None:
+        self._journal.publish_header(self._header(phase).to_bytes())
+
+    def _journal_round(self, ops, ks, vs, frontier_after: int) -> None:
+        r = self._reb
+        if self._journal is None:
+            r["n_rounds"] += 1
+            return
+        self._journal.append(ops=ops, ks=ks, vs=vs,
+                             frontier=np.int32(frontier_after))
+        r["n_rounds"] = self._journal.n_rounds
+
+    def rebalance_round(self) -> bool:
+        """Drain the next ``buckets_per_round`` *global* old buckets into
+        the new map as one routed insert round, journal it, and advance
+        the frontier.  Returns True when the rebalance completed (the
+        last round also adopts the new map)."""
+        r = self._reb
+        assert r is not None, "no rebalance in flight"
+        nb = self.map.n_buckets
+        lo, hi = r["frontier"], min(r["frontier"] + r["bpr"], nb)
+        parts = []
+        for s in range(self.map.n_shards):   # split order = bucket-asc
+            a = max(lo, r["splits_old"][s])
+            b = min(hi, r["splits_old"][s + 1])
+            if a < b:
+                parts.append(drain_range(
+                    r["shard_host"][s], a - r["splits_old"][s],
+                    b - r["splits_old"][s]))
+        ks = (np.concatenate([p[0] for p in parts]) if parts
+              else np.zeros(0, np.int32))
+        vs = (np.concatenate([p[1] for p in parts]) if parts
+              else np.zeros(0, np.int32))
+        n_cand = int(ks.size)
+        if n_cand:
+            r["remaining"] -= np.bincount(
+                r["new"].owners_of(ks), minlength=self.map.n_shards)
+            # new-authoritative filter: keys user traffic already pulled
+            # (or re-inserted, or deleted) must not be re-migrated
+            ex, _, _ = r["new"].probe(ks)
+            ks, vs = ks[~ex], vs[~ex]
+        ops = np.zeros(ks.size, np.int32)          # all OP_INSERT
+        if ks.size:
+            ok, stats = r["new"].insert(ks, vs)
+            if not ok.all():   # not assert: must survive python -O too
+                raise RuntimeError(
+                    f"rebalance drain dropped keys at global bucket "
+                    f"{lo} (reserve accounting bug)")
+            r["foreign"] += int(np.sum(np.asarray(stats.foreign_ops)))
+            r["bf"] += np.asarray(stats.bucket_flushes)
+        self._journal_round(ops, ks, vs, hi)
+        r["frontier"] = hi
+        r["drain_rounds"] += 1
+        r["migrated"] += int(ks.size)
+        r["skipped"] += n_cand - int(ks.size)
+        self.rounds_total += 1
+        self.migrated_total += int(ks.size)
+        if hi >= nb:
+            self._finish()
+            return True
+        return False
+
+    def run_rebalance(self) -> RebalanceReport:
+        """Drive the in-flight rebalance to completion (blocking)."""
+        assert self._reb is not None
+        while self._reb is not None:
+            self.rebalance_round()
+        return self.last_report
+
+    def _finish(self) -> None:
+        r = self._reb
+        if self._journal is not None:
+            self._publish_header("done")
+            if self._reb_seq > 1:      # previous window's journal is
+                self.io.remove_tree(   # superseded: bound disk growth
+                    f"reb_{self._reb_seq - 1:04d}")
+        self.last_report = RebalanceReport(
+            rounds=r["drain_rounds"], migrated=r["migrated"],
+            foreign_ops=r["foreign"],
+            bucket_flushes=r["bf"].astype(np.int32),
+            splits_old=r["splits_old"], splits_new=r["new"].splits,
+            chain_before=r["chain_before"],
+            chain_after=r["new"].chain_stats())
+        self.map = r["new"]
+        self._reb = None
+        self._journal = None
+        # the trigger measures post-rebalance traffic only: stale skew
+        # must not immediately re-fire against the corrected boundaries
+        self.loads[:] = 0
+        self._updates_since_check = 0
+        self.rebalances_completed += 1
+
+    def _commit_rebalancing(self, ops, ks, vs):
+        """Commit a user batch into the new map as one mixed routed
+        round of ``[pull-inserts; user ops]`` (pull-first, see module
+        docstring)."""
+        r = self._reb
+        new = r["new"]
+        uniq = np.unique(ks)
+        ex_new, _, _ = new.probe(uniq)
+        cand = uniq[~ex_new]
+        _, live_old, val_old = self.map.probe(cand)
+        pull_ks = cand[live_old]
+        pull_vs = val_old[live_old].astype(np.int32)
+        # exact per-shard reserve check: every pull and every fresh user
+        # insert allocates at worst one node in its owner shard; the
+        # un-drained remainder must still fit behind them
+        fresh_cand = cand[~live_old]
+        fresh_user = np.unique(ks[ops == B.OP_INSERT])
+        fresh_user = fresh_user[np.isin(fresh_user, fresh_cand,
+                                        assume_unique=True)]
+        alloc_ks = np.concatenate([pull_ks, fresh_user])
+        demand = (np.bincount(new.owners_of(alloc_ks),
+                              minlength=self.map.n_shards)
+                  if alloc_ks.size else np.zeros(self.map.n_shards,
+                                                 np.int64))
+        if not bool((new.cursors + demand + r["remaining"]
+                     <= new.cap_local).all()):
+            # this batch plus the un-drained remainder cannot fit the
+            # new pools: finish now (the reserve guarantees the drains
+            # fit) and commit against the adopted map
+            self.run_rebalance()
+            return self.update(ops, ks, vs)
+        bops = np.concatenate(
+            [np.full(pull_ks.size, B.OP_INSERT, np.int32), ops])
+        bks = np.concatenate([pull_ks, ks])
+        bvs = np.concatenate([pull_vs, vs])
+        if bks.size == 0:
+            return np.zeros(0, np.bool_), None
+        ok, stats = new.update(bops, bks, bvs)
+        if not ok[:pull_ks.size].all():  # not assert: survive python -O
+            raise RuntimeError("rebalance pull dropped keys "
+                               "(reserve accounting bug)")
+        r["foreign"] += int(np.sum(np.asarray(stats.foreign_ops)))
+        r["bf"] += np.asarray(stats.bucket_flushes)
+        self._journal_round(bops, bks, bvs, r["frontier"])
+        self.pulls_total += int(pull_ks.size)
+        self._note(stats)
+        return ok[pull_ks.size:], stats
+
+    # ---------------- growth (for the index backend) ------------------- #
+    def grow_to(self, *, capacity: Optional[int] = None,
+                n_buckets: Optional[int] = None) -> RebalanceReport:
+        """Capacity/bucket growth: finish any in-flight rebalance, then
+        migrate through the blocking mesh path
+        (:meth:`~ShardedDurableMap.migrate_to`, splits scaled by its
+        rules) and adopt the grown map in place.  The load counters
+        reset — they are per-bucket and the bucket space may change."""
+        if self._reb is not None:
+            self.run_rebalance()
+        self.map, report = self.map.migrate_to(capacity=capacity,
+                                               n_buckets=n_buckets)
+        self.loads = np.zeros(self.map.n_buckets, np.int64)
+        self._updates_since_check = 0
+        self.last_report = report
+        return report
+
+    # ---------------- crash recovery ----------------------------------- #
+    def crash(self) -> None:
+        """Simulate a process kill: the staging area is lost (unfenced
+        journal bytes with it) and the in-memory maps are dropped.  Use
+        :meth:`recover` on the same root afterwards."""
+        assert self.io is not None, "crash() needs a durable root"
+        self.io.crash(evict="none")
+        self.map = None
+        self._reb = None
+        self._journal = None
+
+    @classmethod
+    def recover(cls, root, n_shards: Optional[int] = None, *,
+                mesh=None, seed: int = 0, rounds_per_update: int = 1,
+                policy: Optional[AutoRebalancePolicy] = None
+                ) -> "RebalancingShardedMap":
+        """Rebuild from the newest rebalance journal: restore the frozen
+        old map from the snapshot, replay the published rounds in order
+        through the routed engine (deterministic → bit-identical), and
+        resume from the recovered frontier.  A ``done`` header recovers
+        the completed re-split map."""
+        root = Path(root)
+        d = RoundJournal.newest_dir(root, "reb")
+        if d is None:
+            raise FileNotFoundError(
+                f"no published rebalance journal under {root}")
+        hdr_bytes, snap, rounds = RoundJournal.read(root, d)
+        hdr = RebalanceState.from_bytes(hdr_bytes)
+        m = cls(n_shards, capacity=hdr.capacity_old,
+                n_buckets=hdr.n_buckets, mesh=mesh,
+                splits=hdr.splits_old, root=root, seed=seed,
+                rounds_per_update=rounds_per_update, policy=policy)
+        m._reb_seq = int(d.split("_")[1])
+        m.map.load_state(snap)
+        new = ShardedDurableMap(
+            m.map.n_shards, capacity=hdr.capacity_new,
+            n_buckets=hdr.n_buckets, mesh=m.map.mesh,
+            splits=hdr.splits_new)
+        frontier = drain_rounds = migrated = foreign = 0
+        bf = np.zeros(hdr.n_buckets, np.int64)
+        for rec in rounds:
+            if rec["ks"].size:
+                _, stats = new.update(rec["ops"], rec["ks"], rec["vs"])
+                foreign += int(np.sum(np.asarray(stats.foreign_ops)))
+                bf += np.asarray(stats.bucket_flushes)
+            f_after = int(rec["frontier"])
+            if f_after > frontier:               # a drain round
+                drain_rounds += 1
+                migrated += int(rec["ks"].size)
+                frontier = f_after
+        if hdr.phase == "done":
+            m.map = new
+            m.rebalances_completed = 1
+            return m
+        shard_host = [{f: np.asarray(snap[f][s])
+                       for f in ("key", "val", "nxt", "live", "head",
+                                 "cursor", "flushes", "fences")}
+                      for s in range(m.map.n_shards)]
+        m._reb = {
+            "new": new, "frontier": frontier,
+            "bpr": hdr.buckets_per_round, "n_rounds": len(rounds),
+            "drain_rounds": drain_rounds, "shard_host": shard_host,
+            "remaining": _pending_per_shard(shard_host, hdr.splits_old,
+                                            frontier, new),
+            "migrated": migrated, "skipped": 0, "foreign": foreign,
+            "bf": bf, "splits_old": hdr.splits_old,
+            "chain_before": m.map.chain_stats(),
+        }
+        m._journal = RoundJournal(m.io, d)
+        m._journal.n_rounds = len(rounds)    # resume round numbering
+        return m

@@ -270,7 +270,11 @@ class RebalanceReport(NamedTuple):
 
 def even_splits(n_buckets: int, n_shards: int) -> Tuple[int, ...]:
     """The default contiguous-range boundaries: ``n_shards`` equal
-    ranges (requires divisibility, like the original static split)."""
+    ranges (requires divisibility, like the original static split).
+
+    >>> even_splits(64, 4)
+    (0, 16, 32, 48, 64)
+    """
     if n_buckets % n_shards:
         raise ValueError(
             f"n_buckets={n_buckets} not divisible by n_shards={n_shards}"
@@ -452,6 +456,34 @@ class ShardedDurableMap:
         """Fullest shard's bump cursor — the growth trigger (a batch of
         fresh inserts could in the worst case all hash to one shard)."""
         return int(np.max(jax.device_get(self.state.cursor)))
+
+    @property
+    def cursors(self) -> np.ndarray:
+        """Per-shard bump cursors (``int64[S]``) — the exact per-shard
+        fits checks (index growth, live rebalance reserve) compare these
+        against per-shard allocation demand."""
+        return np.asarray(jax.device_get(self.state.cursor), np.int64)
+
+    def fresh_demand(self, ks) -> np.ndarray:
+        """Per-shard allocation demand (``int64[S]``) of a batch of
+        distinct insert keys: only keys without a node (live or dead —
+        a removed key's node is resurrected in place) allocate, each in
+        its owner shard.  The exact half of the index growth check."""
+        ks = np.asarray(ks, np.int32)
+        exists, _, _ = self.probe(ks)
+        return np.bincount(self.owners_of(ks[~exists]),
+                           minlength=self.n_shards).astype(np.int64)
+
+    def load_state(self, arrays: dict) -> None:
+        """Adopt a host snapshot (field name → stacked ``[S, …]`` numpy
+        array, as ``jax.device_get(self.state)`` produces) as this map's
+        state, re-sharded onto the mesh — the rebalance journal's
+        recovery path.  The arrays must match this map's geometry."""
+        st = ShardedState(**{f: jnp.asarray(arrays[f])
+                             for f in ShardedState._fields})
+        self.state = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(
+                self.mesh, P(AXIS, *([None] * (x.ndim - 1))))), st)
 
     def chain_stats(self) -> Tuple[int, float]:
         """Global (max, mean) chain length over all shards' buckets

@@ -40,7 +40,13 @@ def make_map_splits(n_buckets: int, n_shards: int, loads=None):
     lengths or flush counters from ``ShardCommitStats.bucket_flushes``)
     the boundaries split the cumulative load into ``n_shards`` equal
     quantiles, so a skewed key distribution lands ranges of equal
-    *work* rather than equal width.  Every range is kept non-empty."""
+    *work* rather than equal width.  Every range is kept non-empty.
+
+    >>> make_map_splits(64, 4)
+    (0, 16, 32, 48, 64)
+    >>> make_map_splits(8, 2, loads=[12.0, 0, 0, 0, 0, 0, 0, 0])
+    (0, 1, 8)
+    """
     if loads is None:
         from ..core.sharded import even_splits
         return even_splits(n_buckets, n_shards)
@@ -57,6 +63,49 @@ def make_map_splits(n_buckets: int, n_shards: int, loads=None):
         bounds.append(b)
     bounds.append(n_buckets)
     return tuple(bounds)
+
+
+def replan_splits(splits, loads, *, threshold: float = 1.5):
+    """Split re-planning: should the current bucket-range boundaries
+    move, given the cumulative per-bucket load since they were set?
+
+    ``splits`` are the current ``n_shards + 1`` boundaries, ``loads``
+    one nonnegative weight per global bucket (e.g. the accumulated
+    ``CommitStats.bucket_flushes``).  Returns ``(new_splits, imbalance)``
+    where ``imbalance`` is the hottest shard's load over the mean
+    per-shard load (1.0 = perfectly balanced) and ``new_splits`` is the
+    load-quantile re-plan from :func:`make_map_splits` — or ``None``
+    when no move is warranted: the imbalance is within ``threshold``,
+    there is no load at all, or the re-plan reproduces the current
+    boundaries (a single ultra-hot bucket cannot be split further;
+    returning ``None`` then prevents trigger thrashing).  This is the
+    decision function behind
+    :class:`repro.core.rebalance.AutoRebalancePolicy`.
+
+    >>> replan_splits((0, 2, 4), [10.0, 10.0, 10.0, 10.0])
+    (None, 1.0)
+    >>> replan_splits((0, 2, 4), [40.0, 0.0, 0.0, 0.0])
+    ((0, 1, 4), 2.0)
+    """
+    import numpy as np
+    splits = tuple(int(b) for b in splits)
+    n_shards = len(splits) - 1
+    n_buckets = splits[-1]
+    loads = np.asarray(loads, np.float64)
+    if loads.shape != (n_buckets,):
+        raise ValueError(f"loads must have shape ({n_buckets},)")
+    per = np.asarray([loads[a:b].sum()
+                      for a, b in zip(splits, splits[1:])])
+    total = float(per.sum())
+    if total <= 0:
+        return None, 1.0
+    imbalance = float(per.max() / (total / n_shards))
+    if imbalance <= threshold:
+        return None, imbalance
+    new = tuple(make_map_splits(n_buckets, n_shards, loads=loads))
+    if new == splits:
+        return None, imbalance
+    return new, imbalance
 
 
 # TPU v5e hardware constants (roofline terms, EXPERIMENTS.md §Roofline)

@@ -104,14 +104,33 @@ class _SingleBackend:
 
 
 class _ShardedBackend:
-    """Bucket-range-sharded map behind the index (multi-device)."""
+    """Bucket-range-sharded map behind the index (multi-device).
+
+    With ``auto_rebalance`` the map is a
+    :class:`repro.core.rebalance.RebalancingShardedMap`: skewed member
+    streams re-split the bucket-range boundaries *under live index
+    traffic* (no stop-the-world drain), and growth runs through the same
+    live machinery (finish any in-flight re-split, then migrate)."""
 
     def __init__(self, capacity: int, n_buckets: int, n_shards: int,
-                 mesh=None):
-        from ..core.sharded import ShardedDurableMap
-        self.map = ShardedDurableMap(
-            n_shards, capacity=capacity, n_buckets=n_buckets, mesh=mesh)
+                 mesh=None, auto_rebalance: bool = False):
+        if auto_rebalance:
+            from ..core.rebalance import (AutoRebalancePolicy,
+                                          RebalancingShardedMap)
+            self.map = RebalancingShardedMap(
+                n_shards, capacity=capacity, n_buckets=n_buckets,
+                mesh=mesh, policy=AutoRebalancePolicy())
+        else:
+            from ..core.sharded import ShardedDurableMap
+            self.map = ShardedDurableMap(
+                n_shards, capacity=capacity, n_buckets=n_buckets,
+                mesh=mesh)
+        self._live = auto_rebalance
         self.migrations = 0
+
+    @property
+    def rebalances(self) -> int:
+        return self.map.rebalances_completed if self._live else 0
 
     @property
     def state(self):
@@ -132,17 +151,15 @@ class _ShardedBackend:
         compare per-shard demand against each shard's own free pool —
         not the old fullest-shard-times-whole-batch worst case.  The
         mesh probe only runs when the batch-size upper bound does not
-        already prove fitness."""
-        cursors = np.asarray(self.map.state.cursor)
+        already prove fitness.  (The live-rebalance map keeps the check
+        exact mid-re-split: its ``cursors`` include the un-drained
+        reserve, and its ``fresh_demand`` counts a key whose only node
+        is a dead one in the frozen old map as allocating — the merged
+        probe's ``exists`` would wrongly exclude it.)"""
+        cursors = self.map.cursors
         if int(cursors.max()) + ks.size <= self.map.cap_local:
             return True
-        uniq = np.unique(ks)
-        exists, _, _ = self.map.probe(uniq)
-        fresh = uniq[~exists]
-        if fresh.size == 0:
-            return True
-        demand = np.bincount(self.map.owners_of(fresh),
-                             minlength=self.map.n_shards)
+        demand = self.map.fresh_demand(np.unique(ks))
         return bool((cursors + demand <= self.map.cap_local).all())
 
     def grow_for(self, ks: np.ndarray) -> None:
@@ -152,9 +169,13 @@ class _ShardedBackend:
         :meth:`repro.core.sharded.ShardedDurableMap.migrate_to` until
         the batch fits each owner shard."""
         while not self.fits(ks):
-            self.map, _ = self.map.migrate_to(
-                capacity=2 * self.map.cap_local * self.map.n_shards,
-                n_buckets=2 * self.map.n_buckets)
+            cap = 2 * self.map.cap_local * self.map.n_shards
+            nb = 2 * self.map.n_buckets
+            if self._live:
+                self.map.grow_to(capacity=cap, n_buckets=nb)
+            else:
+                self.map, _ = self.map.migrate_to(capacity=cap,
+                                                  n_buckets=nb)
             self.migrations += 1
 
     def update(self, ops: np.ndarray, ks: np.ndarray):
@@ -192,14 +213,19 @@ class MembershipIndex:
     ``n_shards`` (optional) runs the map bucket-range-sharded across
     that many devices (:class:`repro.core.sharded.ShardedDurableMap`)
     with the identical public API; ``mesh`` overrides the auto-built
-    1-D shard mesh."""
+    1-D shard mesh.  ``auto_rebalance`` (sharded backend only) swaps
+    the map for a :class:`repro.core.rebalance.RebalancingShardedMap`
+    so skewed member streams re-split the bucket-range boundaries under
+    live index traffic (:attr:`rebalances` counts completions)."""
 
     def __init__(self, capacity: int = 4096, n_buckets: int = N_BUCKETS,
-                 n_shards: Optional[int] = None, mesh=None):
+                 n_shards: Optional[int] = None, mesh=None,
+                 auto_rebalance: bool = False):
         self.n_buckets = n_buckets
         self.capacity = capacity
         self.n_shards = n_shards
         self._mesh = mesh
+        self._auto_rebalance = auto_rebalance
         self._backend = self._make_backend(capacity)
         self._members: set = set()               # live in-range members
         self._oob: set = set()     # members outside the int32 key space
@@ -209,7 +235,8 @@ class MembershipIndex:
         if self.n_shards is None:
             return _SingleBackend(capacity, self.n_buckets)
         return _ShardedBackend(capacity, self.n_buckets, self.n_shards,
-                               self._mesh)
+                               self._mesh,
+                               auto_rebalance=self._auto_rebalance)
 
     @property
     def state(self):
@@ -221,6 +248,12 @@ class MembershipIndex:
     def migrations(self) -> int:
         """Online growth migrations the backend has run so far."""
         return self._backend.migrations
+
+    @property
+    def rebalances(self) -> int:
+        """Live cross-shard re-splits completed (0 unless the backend
+        was opted in with ``auto_rebalance``)."""
+        return getattr(self._backend, "rebalances", 0)
 
     @staticmethod
     def _in_range(k: int) -> bool:

@@ -44,7 +44,7 @@ class RequestLog:
     _RACY_NS = 2_000_000_000
 
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None, rebalance: bool = False):
         """``shards`` (optional) backs the dedup index with the
         bucket-range-sharded durable map
         (:class:`repro.core.sharded.ShardedDurableMap`) across that many
@@ -53,10 +53,15 @@ class RequestLog:
         under live traffic the dedup map grows itself via the bounded
         migration rounds of :mod:`repro.core.migrate`
         (:attr:`dedup_migrations` counts the growth events), so a
-        long-running server never hits a dedup ceiling."""
+        long-running server never hits a dedup ceiling.  ``rebalance``
+        (sharded only) additionally lets skewed rid streams re-split the
+        shard boundaries under live traffic via
+        :class:`repro.core.rebalance.RebalancingShardedMap`
+        (:attr:`dedup_rebalances` counts completions)."""
         self.io = StagedIO(Path(root), seed=seed)
         self._dedup = MembershipIndex(capacity, n_buckets=256,
-                                      n_shards=shards)
+                                      n_shards=shards,
+                                      auto_rebalance=rebalance)
         self._folded: set = set()  # log filenames already in the index
         self._torn: dict = {}      # torn filename -> (size, mtime_ns) seen
         self._results: Dict[int, list] = {}   # rid -> committed result
@@ -212,6 +217,12 @@ class RequestLog:
         eviction ``retain`` window is mis-sized)."""
         return self._dedup.migrations
 
+    @property
+    def dedup_rebalances(self) -> int:
+        """Live cross-shard re-splits the dedup map has completed (only
+        nonzero when the log was opened with ``rebalance=True``)."""
+        return self._dedup.rebalances
+
     def is_committed(self, rids: Sequence[int]) -> np.ndarray:
         """Batched exactly-once probe over the dedup map (bool[len(rids)]).
         Arbitrary-int rids are fine: the index stores int32-representable
@@ -294,19 +305,24 @@ def _stack_batch(prompts: List[np.ndarray]) -> np.ndarray:
 class ServeEngine:
     def __init__(self, model, params, *, max_len: int, log_dir,
                  batch_size: int = 4, retain: Optional[int] = None,
-                 log_shards: Optional[int] = None):
+                 log_shards: Optional[int] = None,
+                 log_rebalance: bool = False):
         """``retain`` bounds the exactly-once window: when set, each
         commit also evicts all but the newest ``retain`` committed rids
         from the durable dedup index — one mixed insert/delete round —
         so the serving map does not grow without bound under production
         traffic.  ``log_shards`` opts the request-log dedup map into the
-        bucket-range-sharded backend (multi-device deployments)."""
+        bucket-range-sharded backend (multi-device deployments);
+        ``log_rebalance`` further lets it re-split its shard boundaries
+        under live traffic when the rid stream skews (see
+        :class:`repro.core.rebalance.RebalancingShardedMap`)."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.batch = batch_size
         self.retain = retain
-        self.log = RequestLog(log_dir, shards=log_shards)
+        self.log = RequestLog(log_dir, shards=log_shards,
+                              rebalance=log_rebalance)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)

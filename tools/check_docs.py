@@ -1,0 +1,130 @@
+"""Docs lane: keep the prose wired to the code.
+
+Two checks, both designed to fail CI the moment a doc rots:
+
+1. **Link + code-pointer check** (always): every relative markdown link
+   in ``docs/*.md`` (and ``ROADMAP.md``) must resolve to a real file,
+   and every backticked code pointer of the form ``path/to/file.py``,
+   ``file.py:symbol`` or ``file.py::test_node`` must name a file that
+   exists (resolved against the repo root, ``src/repro/``, or by
+   basename search under ``src/``) and — when a symbol is given — a
+   ``def``/``class`` of that name inside it.
+
+2. **Doctest smoke** (``--doctest``): runs the doctest examples
+   embedded in the API docstrings of the durable-map stack
+   (host-side helpers only — hashes, split planning, header
+   round-trips), and fails if fewer than ``MIN_DOCTESTS`` examples ran,
+   so the smoke cannot silently become empty.
+
+    PYTHONPATH=src python tools/check_docs.py [--doctest]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(REPO.glob("docs/*.md")) + [REPO / "ROADMAP.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(
+    r"`([\w][\w/.-]*\.(?:py|md|json|yml))((?:::?)[\w.]+)?`")
+
+DOCTEST_MODULES = [
+    "repro.core.batched",
+    "repro.core.sharded",
+    "repro.core.migrate",
+    "repro.core.rebalance",
+    "repro.launch.mesh",
+    "repro.persistence.index",
+]
+MIN_DOCTESTS = 6
+
+
+def resolve(path: str):
+    """A doc-referenced path, resolved the way a reader would: repo
+    root, then the package root, then by basename anywhere in src/."""
+    for base in (REPO, REPO / "src" / "repro", REPO / "src"):
+        if (base / path).exists():
+            return base / path
+    hits = list((REPO / "src").rglob(path))
+    return hits[0] if hits else None
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        rel = doc.relative_to(REPO)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                                "mailto:")):
+                continue
+            if not ((doc.parent / target).exists()
+                    or (REPO / target).exists()):
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+        for m in CODE_RE.finditer(text):
+            path, sym = m.group(1), m.group(2)
+            f = resolve(path)
+            if f is None:
+                errors.append(f"{rel}: dangling code pointer -> {path}")
+                continue
+            if sym and f.suffix == ".py":
+                src = f.read_text()
+                for part in sym.lstrip(":").split("."):
+                    if not re.search(
+                            rf"(?:def|class)\s+{re.escape(part)}\b"
+                            rf"|^{re.escape(part)}\s*=", src, re.M):
+                        errors.append(
+                            f"{rel}: {path} has no symbol '{part}' "
+                            f"(pointer {path}{sym})")
+    return errors
+
+
+def run_doctests() -> list:
+    import doctest
+    import importlib
+
+    errors = []
+    attempted = 0
+    for name in DOCTEST_MODULES:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as e:
+            errors.append(f"doctest: cannot import {name}: {e}")
+            continue
+        res = doctest.testmod(mod, verbose=False)
+        attempted += res.attempted
+        if res.failed:
+            errors.append(f"doctest: {res.failed} failure(s) in {name}")
+    if attempted < MIN_DOCTESTS:
+        errors.append(
+            f"doctest smoke shrank: only {attempted} examples ran "
+            f"(expected >= {MIN_DOCTESTS}) — docstring examples were "
+            f"removed without updating tools/check_docs.py")
+    print(f"doctest smoke: {attempted} examples across "
+          f"{len(DOCTEST_MODULES)} modules")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doctest", action="store_true",
+                    help="also run the docstring doctest smoke")
+    args = ap.parse_args()
+    errors = check_links()
+    n_docs = len(DOC_FILES)
+    if args.doctest:
+        errors += run_doctests()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs ok: {n_docs} markdown files checked")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

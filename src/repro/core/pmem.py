@@ -41,6 +41,36 @@ import numpy as np
 NULL = -1  # null "pointer" (node index)
 
 
+def evicted_mask(n: int, evict, rng: np.random.Generator,
+                 p_evict: float = 0.5) -> np.ndarray:
+    """The shared implicit-eviction adversary, one policy for every
+    crash model in the repo: given ``n`` pending items (dirty cache
+    lines for :class:`PMem`, staged-but-unfenced files for
+    :class:`repro.persistence.manifest.StagedIO`), return a bool mask —
+    True means that item happened to reach durable storage at the
+    crash.  Seedable via ``rng`` so adversarial schedules replay
+    exactly; unknown modes raise instead of silently behaving like
+    ``"random"``.
+
+    >>> import numpy as np
+    >>> evicted_mask(3, "none", np.random.default_rng(0)).tolist()
+    [False, False, False]
+    >>> evicted_mask(3, "all", np.random.default_rng(0)).tolist()
+    [True, True, True]
+    >>> a = evicted_mask(5, "random", np.random.default_rng(7))
+    >>> b = evicted_mask(5, "random", np.random.default_rng(7))
+    >>> bool((a == b).all())
+    True
+    """
+    if evict == "none":
+        return np.zeros(n, dtype=bool)
+    if evict == "all":
+        return np.ones(n, dtype=bool)
+    if evict == "random":
+        return rng.random(n) < p_evict
+    raise ValueError(f"unknown evict mode {evict!r}")
+
+
 @dataclasses.dataclass
 class PMemCounters:
     """Instruction accounting used by the paper-figure cost model."""
@@ -84,6 +114,10 @@ class PMem:
         self.counters = PMemCounters()
         self._rng = np.random.default_rng(seed)
         self._crashed = False
+        # optional repro.robustness.faultinject.CrashPlan: when set,
+        # every persistence instruction reports a crash site before
+        # executing (attach via CrashPlan.attach, never set directly)
+        self.faults = None
         # address 0 is reserved (packed null); allocations start at line 1
         self._alloc_cursor = line_words
 
@@ -101,6 +135,8 @@ class PMem:
 
     def cas(self, addr: int, expected: int, new: int) -> bool:
         """Atomic compare-and-swap on the volatile view."""
+        if self.faults is not None:
+            self.faults.on_site("publish", f"addr:{addr}")
         self.counters.cas += 1
         if int(self.volatile[addr]) == expected:
             self.volatile[addr] = new
@@ -121,6 +157,8 @@ class PMem:
         executes; until then the line may still be dropped by a crash
         (matching clwb + sfence semantics).
         """
+        if self.faults is not None:
+            self.faults.on_site("flush", f"line:{self.line_of(addr)}")
         self.counters.flushes += 1
         if in_traverse:
             self.counters.traverse_flushes += 1
@@ -128,6 +166,8 @@ class PMem:
 
     def fence(self, *, in_traverse: bool = False) -> None:
         """sfence: all lines flushed since the previous fence are persisted."""
+        if self.faults is not None:
+            self.faults.on_site("fence", "")
         self.counters.fences += 1
         if in_traverse:
             self.counters.traverse_fences += 1
@@ -169,15 +209,8 @@ class PMem:
         """
         lines = self.dirty_lines()
         if isinstance(evict, str):
-            if evict == "none":
-                chosen = np.array([], dtype=np.int64)
-            elif evict == "all":
-                chosen = lines
-            elif evict == "random":
-                mask = self._rng.random(len(lines)) < p_evict
-                chosen = lines[mask]
-            else:  # pragma: no cover - guarded by tests
-                raise ValueError(f"unknown evict mode {evict!r}")
+            chosen = lines[evicted_mask(len(lines), evict, self._rng,
+                                        p_evict)]
         else:
             chosen = np.asarray(sorted(set(evict)), dtype=np.int64)
         for ln in chosen:

@@ -590,12 +590,14 @@ class RebalancingShardedMap:
         return report
 
     # ---------------- crash recovery ----------------------------------- #
-    def crash(self) -> None:
+    def crash(self, evict: str = "none", p_evict: float = 0.5) -> None:
         """Simulate a process kill: the staging area is lost (unfenced
-        journal bytes with it) and the in-memory maps are dropped.  Use
-        :meth:`recover` on the same root afterwards."""
+        journal bytes with it) and the in-memory maps are dropped.
+        ``evict`` selects the shared implicit-eviction adversary
+        (:func:`repro.core.pmem.evicted_mask`) over the staged journal
+        files.  Use :meth:`recover` on the same root afterwards."""
         assert self.io is not None, "crash() needs a durable root"
-        self.io.crash(evict="none")
+        self.io.crash(evict=evict, p_evict=p_evict)
         self.map = None
         self._reb = None
         self._journal = None

@@ -59,9 +59,17 @@ def _leaf_from_bytes(b: bytes) -> np.ndarray:
 
 
 class CheckpointManager:
-    def __init__(self, root, *, policy: str = "nvtraverse", seed: int = 0):
+    def __init__(self, root, *, policy: str = "nvtraverse", seed: int = 0,
+                 faults=None):
+        """``faults`` (optional) attaches a
+        :class:`repro.robustness.faultinject.CrashPlan` to the manager's
+        IO, making every flush/fence/publish/trim of save()/gc() an
+        enumerable crash site — the systematic generalization of the
+        hand-picked ``crash_after`` hooks in :meth:`save`."""
         assert policy in ("nvtraverse", "izraelevitz")
         self.io = StagedIO(Path(root), seed=seed)
+        if faults is not None:
+            faults.attach(self.io)
         self.policy = policy
         self._last_manifest: Optional[Manifest] = None
         # live-step membership index, kept current across recover()/gc()

@@ -27,6 +27,8 @@ from typing import Dict, Iterable, Optional
 
 import numpy as np
 
+from ..core.pmem import evicted_mask
+
 
 @dataclasses.dataclass
 class IOCounters:
@@ -50,6 +52,11 @@ class StagedIO:
         self._flushed: set = set()
         self.counters = IOCounters()
         self._rng = np.random.default_rng(seed)
+        # optional repro.robustness.faultinject.CrashPlan: when set,
+        # every persistence instruction (flush/fence/publish/trim)
+        # reports a crash site before executing (attach via
+        # CrashPlan.attach, never set directly)
+        self.faults = None
 
     # -- volatile writes -------------------------------------------------- #
     def write(self, rel: str, data: bytes) -> None:
@@ -59,10 +66,14 @@ class StagedIO:
 
     def flush(self, rel: str) -> None:
         if rel in self._staged:
+            if self.faults is not None:
+                self.faults.on_site("flush", rel)
             self._flushed.add(rel)
             self.counters.flushes += 1
 
     def fence(self) -> None:
+        if self.faults is not None:
+            self.faults.on_site("fence", "")
         self.counters.fences += 1
         for rel in sorted(self._flushed):
             data = self._staged.pop(rel, None)
@@ -78,18 +89,26 @@ class StagedIO:
     def publish(self, tmp_rel: str, final_rel: str) -> None:
         """Atomic rename of a durable file — the pointer swing.  The tmp
         file must already be fenced."""
+        if self.faults is not None:
+            self.faults.on_site("publish", final_rel)
         os.replace(self.root / tmp_rel, self.root / final_rel)
 
     # -- crash adversary --------------------------------------------------- #
     def crash(self, evict: str = "none", p_evict: float = 0.5) -> None:
         """Lose the staging area; a chosen subset of staged-but-unfenced
-        files may still have reached disk (background eviction)."""
-        if evict != "none":
-            for rel, data in list(self._staged.items()):
-                if evict == "all" or self._rng.random() < p_evict:
-                    path = self.root / rel
-                    path.parent.mkdir(parents=True, exist_ok=True)
-                    path.write_bytes(data)
+        files may still have reached disk (background eviction).  The
+        eviction policy is the shared seedable adversary
+        (:func:`repro.core.pmem.evicted_mask`) applied over staged
+        files in sorted order, so DRAM-line and file-staging crash
+        models agree — and an unknown mode raises instead of silently
+        evicting at random."""
+        staged = sorted(self._staged)
+        mask = evicted_mask(len(staged), evict, self._rng, p_evict)
+        for rel, hit in zip(staged, mask):
+            if hit:
+                path = self.root / rel
+                path.parent.mkdir(parents=True, exist_ok=True)
+                path.write_bytes(self._staged[rel])
         self._staged.clear()
         self._flushed.clear()
 
@@ -100,7 +119,17 @@ class StagedIO:
     def exists(self, rel: str) -> bool:
         return (self.root / rel).exists()
 
+    def unlink(self, rel: str) -> None:
+        """Remove one durable file (snapshot truncation, journal GC).
+        A trim is a crash site too: recovery must tolerate a kill
+        between any two unlinks of a truncation pass."""
+        if self.faults is not None:
+            self.faults.on_site("trim", rel)
+        (self.root / rel).unlink(missing_ok=True)
+
     def remove_tree(self, rel: str) -> None:
+        if self.faults is not None:
+            self.faults.on_site("trim", rel)
         shutil.rmtree(self.root / rel, ignore_errors=True)
 
 

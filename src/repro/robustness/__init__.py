@@ -1,0 +1,6 @@
+"""Systematic crash-fault injection for the durable layers."""
+from .faultinject import (CrashPlan, CrashPoint, CrashSite, SCENARIOS,
+                          enumerate_sites, sweep)
+
+__all__ = ["CrashPlan", "CrashPoint", "CrashSite", "SCENARIOS",
+           "enumerate_sites", "sweep"]

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
@@ -30,18 +31,28 @@ class RequestLog:
     """Durable request log + a JAX-native dedup index.
 
     The committed-rid set is mirrored into a durable-map
-    :class:`~repro.persistence.index.MembershipIndex` (rebuilt from the
-    log on restart, updated by one *mixed* plan/commit round per commit:
-    new rids insert, expired rids delete, in a single batch), so the
-    exactly-once check in :meth:`ServeEngine.serve` is a batched,
-    persistence-free lookup — the journey — instead of a Python dict
-    probe per request."""
+    :class:`~repro.persistence.index.MembershipIndex` (updated by one
+    *mixed* plan/commit round per commit: new rids insert, expired rids
+    delete, in a single batch), so the exactly-once check in
+    :meth:`ServeEngine.serve` is a batched, persistence-free lookup —
+    the journey — instead of a Python dict probe per request.
+
+    Restart is O(retention window), not O(log length): the caches and
+    the dedup map are seeded from the newest published
+    :meth:`snapshot` and only the post-snapshot record suffix is
+    replayed; :meth:`took_effect`/:meth:`descriptor` then answer a
+    recovering client's "did my op land?" from the map, with zero
+    record parsing."""
 
     # upper bound on the filesystem timestamp granule (1-10 ms coarse
     # clock on modern Linux, but a full second on ext3/HFS+/some network
     # mounts; leave headroom): an mtime younger than this never
     # authorizes the refresh() fast path
     _RACY_NS = 2_000_000_000
+
+    # grace interval granted to a concurrent committer before a torn
+    # placeholder seen at restart is trimmed (and between unlink retries)
+    _TRIM_BACKOFF_S = 0.01
 
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
                  shards: Optional[int] = None, rebalance: bool = False):
@@ -67,15 +78,28 @@ class RequestLog:
         self._results: Dict[int, list] = {}   # rid -> committed result
         self._n = 0                # next log index: 1 + highest seen
         self._dir_mtime: Optional[int] = None  # log dir mtime at last scan
+        self._snap_horizon = 0     # records below this index are covered
+                                   # by the loaded snapshot
+        self._snap_name: Optional[str] = None  # newest published snapshot
+        self._stale: set = set()   # snapshot-covered leftovers (a crash
+                                   # mid-truncation): trimmed at restart
+        self.records_parsed = 0    # log records read+parsed by this
+                                   # instance (restart-replay observability)
+        self._load_snapshot()
         self.refresh()
-        # recovery: a restart is quiescent (no concurrent committer is
-        # mid-fence), so a torn record seen at startup is a permanent
-        # crash leftover — trim it.  Torn files that appear *later* are
-        # another live instance's in-flight commit and must be left
-        # alone (they heal via the refresh() signature check).
+        # recovery: a restart is *usually* quiescent, but the torn
+        # placeholder may be another live instance's in-flight commit —
+        # give the writer one backoff interval to land the payload (and
+        # retry a failed unlink once) instead of failing the restart.
+        # Torn files that appear *later* are always left alone (they
+        # heal via the refresh() signature check).
         for name in list(self._torn):
-            (Path(self.io.root) / name).unlink(missing_ok=True)
-            del self._torn[name]
+            self._trim_torn(name)
+        # finish any truncation a crash interrupted: records (and older
+        # snapshots) the loaded snapshot supersedes
+        for name in sorted(self._stale):
+            self._unlink_quiet(name)
+        self._stale.clear()
 
     @staticmethod
     def _log_index(name: str) -> Optional[int]:
@@ -83,6 +107,70 @@ class RequestLog:
             return int(name[len("log_"):-len(".json")])
         except ValueError:
             return None
+
+    def _load_snapshot(self) -> None:
+        """Restart fast path: seed the caches *and* the durable-map dedup
+        index from the newest published snapshot — one JSON read plus one
+        batched map round — so the scan that follows replays only the
+        post-snapshot record suffix.  Restart cost is O(window), not
+        O(log length).  A torn/alien snapshot file falls back to the
+        next-newest one (the publish rename makes each snapshot
+        all-or-nothing, so this only triggers on outside interference)."""
+        try:
+            with os.scandir(self.io.root) as it:
+                snaps = sorted(e.name for e in it
+                               if e.name.startswith("snap_")
+                               and e.name.endswith(".json"))
+        except FileNotFoundError:
+            return
+        for name in reversed(snaps):
+            try:
+                data = json.loads((Path(self.io.root) / name).read_text())
+                horizon = int(data["horizon"])
+                rec = {int(k): list(v) for k, v in data["results"].items()}
+            except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                    ValueError):
+                continue
+            self._results.update(rec)
+            self._dedup.update(rec, ())
+            self._snap_horizon = horizon
+            self._snap_name = name
+            self._n = max(self._n, horizon)
+            break
+        # superseded older snapshots ride the restart trim
+        self._stale.update(n for n in snaps if n != self._snap_name)
+
+    def _trim_torn(self, name: str) -> None:
+        """Trim one torn record seen at restart, tolerating a concurrent
+        creation race: sleep one backoff interval and re-check first (a
+        mid-commit writer's record heals instead of being trimmed), then
+        retry a failed unlink once.  A still-failing unlink leaves the
+        file in the torn set — it heals or trims later — never failing
+        the restart itself."""
+        time.sleep(self._TRIM_BACKOFF_S)
+        self._try_fold(name)
+        if name not in self._torn:
+            return                  # healed: the writer finished
+        p = Path(self.io.root) / name
+        for retry in (False, True):
+            try:
+                p.unlink(missing_ok=True)
+            except OSError:
+                if retry:
+                    return          # keep it torn; skip, don't fail
+                time.sleep(self._TRIM_BACKOFF_S)
+                continue
+            del self._torn[name]
+            return
+
+    def _unlink_quiet(self, name: str) -> None:
+        """Best-effort trim of one superseded file; a failure just leaves
+        the file for the next truncation pass to retry."""
+        try:
+            self.io.unlink(name)
+        except OSError:
+            pass
+        self._folded.discard(name)
 
     def refresh(self) -> None:
         """Fold commits made by other RequestLog instances on the same log
@@ -167,6 +255,15 @@ class RequestLog:
         being poisoned forever.  ``_n`` advances past every seen log
         index — torn records included — so a commit never reuses the
         slot of a record that is already on disk."""
+        idx = self._log_index(name)
+        if idx is not None and idx < self._snap_horizon:
+            # covered by the loaded snapshot: content already folded.
+            # The file is an interrupted-truncation leftover — queue it
+            # for the restart trim and never re-scan it.
+            self._stale.add(name)
+            self._folded.add(name)
+            self._torn.pop(name, None)
+            return
         p = Path(self.io.root) / name
         try:
             st = p.stat()
@@ -175,9 +272,9 @@ class RequestLog:
         sig = (st.st_size, st.st_mtime_ns)
         if self._torn.get(name) == sig:
             return      # unchanged since the failed parse: still torn
-        idx = self._log_index(name)
         if idx is not None:
             self._n = max(self._n, idx + 1)
+        self.records_parsed += 1
         try:
             rec, evict = self._parse_record(p.read_text())
         except json.JSONDecodeError:
@@ -289,6 +386,79 @@ class RequestLog:
         self.refresh()
         return {k: list(v) for k, v in self._results.items()}
 
+    # ---------------- detectable recovery ------------------------------ #
+    def snapshot(self, truncate: bool = True) -> Optional[str]:
+        """Publish a durable restart snapshot: the committed-results
+        window plus its log horizon, written with the same flush → fence
+        → atomic-publish discipline as a log record.  With ``truncate``
+        (default) the records it covers — and the previous snapshot —
+        are then unlinked, so a restart replays only the post-snapshot
+        suffix: O(retention window), independent of log length.  The
+        horizon never covers a torn record (it may still heal into a
+        commit), and a crash anywhere in here is safe: before the
+        publish the old snapshot still rules; after it, leftover covered
+        records are re-trimmed by the next restart.  Snapshots are meant
+        to be taken by the log's owning serving instance; other
+        instances keep folding records as usual and adopt the snapshot
+        on their own restart.  Returns the published snapshot filename,
+        or None if nothing new is covered."""
+        self.refresh()
+        horizon = self._n
+        for name in self._torn:
+            idx = self._log_index(name)
+            if idx is not None:
+                horizon = min(horizon, idx)
+        if horizon <= self._snap_horizon:
+            return None
+        payload = json.dumps(
+            {"format": 1, "horizon": horizon,
+             "results": {str(k): list(v)
+                         for k, v in self._results.items()}})
+        final = f"snap_{horizon:08d}.json"
+        self.io.write("snap.tmp", payload.encode())
+        self.io.flush("snap.tmp")
+        self.io.fence()
+        self.io.publish("snap.tmp", final)
+        old_snap, self._snap_name = self._snap_name, final
+        self._snap_horizon = horizon
+        if truncate:
+            self._truncate(horizon, old_snap)
+        return final
+
+    def _truncate(self, horizon: int, old_snap: Optional[str]) -> None:
+        """Unlink everything the just-published snapshot supersedes.
+        Crash-safe by construction: every leftover is either below the
+        published horizon (restart re-collects and trims it) or an older
+        snapshot shadowed by the newer one."""
+        for name in sorted(self._folded):
+            idx = self._log_index(name)
+            if idx is not None and idx < horizon:
+                self._unlink_quiet(name)
+        for name in sorted(self._stale):
+            self._unlink_quiet(name)
+        self._stale.clear()
+        if old_snap is not None:
+            self._unlink_quiet(old_snap)
+
+    def took_effect(self, rids: Sequence[int]) -> np.ndarray:
+        """Per-op detectable recovery ("Tracking in Order to Recover"):
+        did each rid's operation take effect?  Answered from the durable
+        dedup map in one batched lookup — no log replay, even
+        immediately after a restart (the snapshot seeds the map with the
+        whole window).  A rid evicted past the retention window answers
+        False: its descriptor left the exactly-once window together with
+        its result."""
+        return self.is_committed(rids)
+
+    def descriptor(self, rid: int) -> dict:
+        """One rid's operation descriptor: whether it took effect and,
+        if so, its committed result — what a recovering client reads
+        instead of re-submitting blind."""
+        took = bool(self.is_committed([rid])[0])
+        res = self._results.get(int(rid))
+        return {"rid": int(rid), "took_effect": took,
+                "result": list(res) if took and res is not None else None}
+
 
 def _stack_batch(prompts: List[np.ndarray]) -> np.ndarray:
     """Stack one equal-length batch of 1-D prompt token arrays.  The
@@ -306,7 +476,8 @@ class ServeEngine:
     def __init__(self, model, params, *, max_len: int, log_dir,
                  batch_size: int = 4, retain: Optional[int] = None,
                  log_shards: Optional[int] = None,
-                 log_rebalance: bool = False):
+                 log_rebalance: bool = False,
+                 snapshot_every: Optional[int] = None):
         """``retain`` bounds the exactly-once window: when set, each
         commit also evicts all but the newest ``retain`` committed rids
         from the durable dedup index — one mixed insert/delete round —
@@ -315,12 +486,17 @@ class ServeEngine:
         bucket-range-sharded backend (multi-device deployments);
         ``log_rebalance`` further lets it re-split its shard boundaries
         under live traffic when the rid stream skews (see
-        :class:`repro.core.rebalance.RebalancingShardedMap`)."""
+        :class:`repro.core.rebalance.RebalancingShardedMap`).
+        ``snapshot_every`` publishes a truncating
+        :meth:`RequestLog.snapshot` after that many commits, keeping a
+        restart O(retention window) instead of O(served history)."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.batch = batch_size
         self.retain = retain
+        self.snapshot_every = snapshot_every
+        self._commits_since_snap = 0
         self.log = RequestLog(log_dir, shards=log_shards,
                               rebalance=log_rebalance)
         self._prefill = jax.jit(
@@ -381,6 +557,11 @@ class ServeEngine:
                 self.log.commit({int(r): gen[j].tolist()  # the destination
                                  for j, r in enumerate(batch_rids)},
                                 evict=expired)
+                self._commits_since_snap += 1
+                if self.snapshot_every is not None and \
+                        self._commits_since_snap >= self.snapshot_every:
+                    self.log.snapshot()
+                    self._commits_since_snap = 0
                 batches += 1
                 if crash_after_batches is not None and \
                         batches >= crash_after_batches:
@@ -391,3 +572,10 @@ class ServeEngine:
                 break
         committed = self.log.committed()
         return {rid: committed[rid] for rid in requests if rid in committed}
+
+    def took_effect(self, rids: Sequence[int]) -> np.ndarray:
+        """Recovering-client probe: which of ``rids`` durably took
+        effect (see :meth:`RequestLog.took_effect`) — answered without
+        log replay."""
+        self.log.refresh()
+        return self.log.took_effect(rids)

@@ -1,0 +1,165 @@
+"""Systematic crash-fault injection: CrashPlan machinery + layer sweeps.
+
+The full checkpoint-layer sweep lives in tests/test_persistence.py next
+to the other checkpoint durability tests; here we cover the injection
+machinery itself, the serving-log layer exhaustively, and the (slower)
+migration/rebalance layers on a bounded site budget — CI's dedicated
+fault-injection lane runs tools/crash_sweep.py for the wider sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pmem import PMem, evicted_mask
+from repro.persistence.manifest import StagedIO
+from repro.robustness.faultinject import (CrashPlan, CrashPoint, SCENARIOS,
+                                          _budget_indices, enumerate_sites,
+                                          sweep)
+
+
+# --------------------------------------------------------------------- #
+# the unified eviction adversary (satellite: one policy, both models)    #
+# --------------------------------------------------------------------- #
+def test_evicted_mask_modes_and_determinism():
+    rng = np.random.default_rng(0)
+    assert not evicted_mask(4, "none", rng).any()
+    assert evicted_mask(4, "all", rng).all()
+    a = evicted_mask(64, "random", np.random.default_rng(7), 0.5)
+    b = evicted_mask(64, "random", np.random.default_rng(7), 0.5)
+    np.testing.assert_array_equal(a, b)          # seeded: replays exactly
+    assert 0 < a.sum() < 64                      # genuinely mixed
+    assert not evicted_mask(64, "random", np.random.default_rng(1), 0.0).any()
+    assert evicted_mask(64, "random", np.random.default_rng(1), 1.0).all()
+
+
+def test_unknown_evict_mode_raises_in_both_crash_models(tmp_path):
+    with pytest.raises(ValueError, match="unknown evict mode"):
+        evicted_mask(3, "sometimes", np.random.default_rng(0))
+    mem = PMem(64)
+    mem.write(8, 1)
+    with pytest.raises(ValueError, match="unknown evict mode"):
+        mem.crash(evict="sometimes")
+    io = StagedIO(tmp_path)
+    io.write("a", b"x")
+    with pytest.raises(ValueError, match="unknown evict mode"):
+        io.crash(evict="sometimes")
+
+
+def test_stagedio_random_eviction_is_seeded(tmp_path):
+    """Same seed, same staged set -> the same subset survives a crash."""
+    def survivors(seed):
+        io = StagedIO(tmp_path / f"s{seed}" / "x", seed=seed)
+        for i in range(32):
+            io.write(f"f{i:02d}", b"v")
+        io.crash(evict="random", p_evict=0.5)
+        return sorted(p.name for p in (tmp_path / f"s{seed}" / "x").glob(
+            "f*"))
+    assert survivors(3) == survivors(3)
+    assert 0 < len(survivors(3)) < 32
+
+
+# --------------------------------------------------------------------- #
+# CrashPlan instrumentation                                              #
+# --------------------------------------------------------------------- #
+def test_pmem_sites_enumerated_and_crash_before(tmp_path):
+    mem = PMem(64, line_words=8)
+    plan = CrashPlan().attach(mem)
+    mem.write(8, 1)
+    mem.flush(8)
+    mem.fence()
+    mem.cas(16, 0, 5)
+    assert [(s.kind, s.target) for s in plan.sites] == [
+        ("flush", "line:1"), ("fence", ""), ("publish", "addr:16")]
+    # crash-before: the fence (site 1) never executes, so the flushed
+    # line is still pending at the crash and evict="none" drops it
+    mem2 = PMem(64, line_words=8)
+    plan2 = CrashPlan(crash_at=1).attach(mem2)
+    mem2.write(8, 1)
+    mem2.flush(8)
+    with pytest.raises(CrashPoint) as ei:
+        mem2.fence()
+    assert ei.value.site.index == 1 and ei.value.site.kind == "fence"
+    assert mem2.persistent[8] == 0               # pending write lost
+    assert plan2.completed_sites() == plan2.sites[:1]
+    # fired plan goes inert: recovery-path instructions are unobserved
+    mem2.fence()
+    assert len(plan2.sites) == 2
+
+
+def test_stagedio_sites_and_whole_process_crash(tmp_path):
+    """All attached objects crash together, and the publish site fires
+    before the rename executes (the destination file never appears)."""
+    io_a = StagedIO(tmp_path / "a")
+    io_b = StagedIO(tmp_path / "b")
+    plan = CrashPlan(crash_at=3, evict="none").attach(io_a, io_b)
+    io_a.write("x.tmp", b"1")
+    io_a.flush("x.tmp")                          # site 0
+    io_b.write("y", b"2")
+    io_b.flush("y")                              # site 1
+    io_a.fence()                                 # site 2: x.tmp durable
+    with pytest.raises(CrashPoint):
+        io_a.publish("x.tmp", "x")               # site 3: never executes
+    assert (tmp_path / "a" / "x.tmp").exists()
+    assert not (tmp_path / "a" / "x").exists()   # publish did not happen
+    assert not (tmp_path / "b" / "y").exists()   # b's staging lost too
+    kinds = [s.kind for s in plan.sites]
+    assert kinds == ["flush", "flush", "fence", "publish"]
+
+
+def test_fuzz_mode_is_seed_deterministic(tmp_path):
+    """p_crash fuzzing with the same seed fires at the same site."""
+    def fired(seed):
+        io = StagedIO(tmp_path / f"f{seed}" / "x")
+        plan = CrashPlan(p_crash=0.12, seed=seed).attach(io)
+        try:
+            for i in range(40):
+                io.write(f"g{i}", b"v")
+                io.flush(f"g{i}")
+                io.fence()
+        except CrashPoint as cp:
+            return cp.site.index
+        return None
+    assert fired(5) == fired(5)
+    assert fired(5) is not None                  # 80 coins at p=0.12
+    seeds = {fired(s) for s in range(6)}
+    assert len(seeds) > 1                        # seeds actually vary
+
+
+def test_budget_indices_cover_first_and_last():
+    assert _budget_indices(5, None) == [0, 1, 2, 3, 4]
+    assert _budget_indices(5, 99) == [0, 1, 2, 3, 4]
+    for n, budget in ((29, 8), (100, 3), (7, 2)):
+        idxs = _budget_indices(n, budget)
+        assert idxs[0] == 0 and idxs[-1] == n - 1
+        assert len(idxs) <= max(2, budget)
+        assert idxs == sorted(set(idxs))
+
+
+# --------------------------------------------------------------------- #
+# layer sweeps                                                           #
+# --------------------------------------------------------------------- #
+def test_site_enumeration_is_deterministic():
+    a = enumerate_sites(SCENARIOS["log"])
+    b = enumerate_sites(SCENARIOS["log"])
+    assert a == b
+    assert len(a) > 20                           # commits+snapshots+trims
+    assert {s.kind for s in a} >= {"flush", "fence", "publish", "trim"}
+
+
+def test_request_log_sweep_every_site():
+    """Crash at EVERY site of the serving-log scenario, both eviction
+    modes: no acked op lost, oracle equivalence, took_effect answers."""
+    rep = sweep(SCENARIOS["log"], evict_modes=("none", "random"))
+    assert rep["failures"] == []
+    assert rep["runs"] == 2 * rep["n_sites"]
+
+
+def test_migrate_sweep_budgeted():
+    rep = sweep(SCENARIOS["migrate"], budget=8)
+    assert rep["failures"] == []
+    assert rep["n_sites"] > 15                   # the journal is covered
+
+
+def test_rebalance_sweep_budgeted():
+    rep = sweep(SCENARIOS["rebalance"], budget=8)
+    assert rep["failures"] == []
+    assert rep["n_sites"] > 15

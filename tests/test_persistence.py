@@ -154,6 +154,22 @@ def test_gc_trims_dead_steps_from_live_index(tmp_path):
     assert list(mgr._step_index.contains([3, 4])) == [True, True]
 
 
+def test_checkpoint_crash_at_every_site():
+    """Systematic generalization of the hand-picked crash_after hooks
+    above: crash at EVERY flush/fence/publish/trim site of a save+gc
+    chain (both eviction adversaries) and require recovery to land on
+    exactly the last acked step with its exact tree — the
+    repro.robustness.faultinject sweep as a persistence-layer test."""
+    from repro.robustness.faultinject import SCENARIOS, sweep
+    rep = sweep(SCENARIOS["checkpoint"], evict_modes=("none", "random"))
+    assert rep["failures"] == []
+    kinds = {s["kind"] for s in rep["sites"]}
+    # the chain really exercises every instruction class, gc trim
+    # included (step 1 dies at gc time in the scenario)
+    assert kinds == {"flush", "fence", "publish", "trim"}
+    assert rep["runs"] == 2 * rep["n_sites"]
+
+
 def test_mesh_agnostic_restore(tmp_path):
     """Manifests are layout-free: restore onto a different sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -300,6 +300,174 @@ def test_serve_retention_evicts_old_rids(setup, tmp_path):
     assert len(committed) <= 2 + eng.batch   # horizon: retain + last batch
 
 
+def test_snapshot_restart_replays_only_the_suffix(tmp_path):
+    """O(1) serving restart: after snapshot(), a fresh RequestLog seeds
+    itself from the snapshot and parses zero pre-horizon records — the
+    restart cost is the post-snapshot suffix, not the served history."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    for i in range(10):
+        log.commit({i: [i, i]})
+    assert log.snapshot() == "snap_00000010.json"
+    # truncation removed the covered records and any older snapshot
+    assert sorted(p.name for p in tmp_path.glob("log_*.json")) == []
+    log.commit({10: [10, 10]})                   # post-snapshot suffix
+    log2 = RequestLog(tmp_path)                  # restart
+    assert log2.records_parsed == 1              # the suffix record only
+    assert log2.committed() == {i: [i, i] for i in range(11)}
+    assert bool(log2.is_committed(range(11)).all())
+    # a second snapshot supersedes the first
+    assert log2.snapshot() == "snap_00000011.json"
+    assert sorted(p.name for p in tmp_path.glob("snap_*.json")) == \
+        ["snap_00000011.json"]
+    log3 = RequestLog(tmp_path)
+    assert log3.records_parsed == 0              # nothing left to replay
+    assert log3.committed() == log2.committed()
+
+
+def test_snapshot_carries_evictions_and_is_idempotent(tmp_path):
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({1: [1], 2: [2]})
+    log.commit({3: [3]}, evict=[1])
+    assert log.snapshot() is not None
+    assert log.snapshot() is None                # nothing new covered
+    log2 = RequestLog(tmp_path)
+    assert set(log2.committed()) == {2, 3}       # eviction survived
+    assert list(log2.is_committed([1, 2, 3])) == [False, True, True]
+
+
+def test_snapshot_horizon_never_covers_a_torn_record(tmp_path):
+    """A torn record may still heal into a commit, so the snapshot
+    horizon stops below it — the record is not erased by truncation and
+    folds normally once its writer finishes."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    for i in range(3):
+        log.commit({i: [i]})
+    p = tmp_path / "log_000003.json"
+    p.write_text('{"9": [9')                     # concurrent mid-write
+    assert log.snapshot() == "snap_00000003.json"
+    assert p.exists()                            # not truncated away
+    p.write_text('{"9": [9]}')                   # the writer finishes
+    log2 = RequestLog(tmp_path)
+    assert log2.committed() == {0: [0], 1: [1], 2: [2], 9: [9]}
+
+
+def test_restart_trims_interrupted_truncation_leftovers(tmp_path):
+    """A crash between the snapshot publish and the truncation unlinks
+    leaves covered records (and an older snapshot) behind; the next
+    restart folds nothing from them and trims them."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({1: [1]})
+    old = log.snapshot(truncate=False)           # crash before truncating
+    log.commit({2: [2]})
+    new = log.snapshot(truncate=False)
+    assert sorted(p.name for p in tmp_path.glob("*.json")) == \
+        ["log_000000.json", "log_000001.json", old, new]
+    log2 = RequestLog(tmp_path)
+    assert log2.records_parsed == 0              # leftovers never parsed
+    assert log2.committed() == {1: [1], 2: [2]}
+    assert sorted(p.name for p in tmp_path.glob("*.json")) == [new]
+
+
+def test_took_effect_and_descriptor_without_replay(tmp_path):
+    """Detectable recovery: a recovering client asks took_effect(rid) /
+    descriptor(rid) and is answered from the snapshot-seeded dedup map —
+    zero log records parsed after the restart."""
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path)
+    log.commit({1: [1, 2], 2: [2, 3]})
+    log.commit({3: [3, 4]}, evict=[1])
+    log.snapshot()
+    log2 = RequestLog(tmp_path)
+    assert log2.records_parsed == 0
+    np.testing.assert_array_equal(log2.took_effect([1, 2, 3, 4]),
+                                  [False, True, True, False])
+    assert log2.descriptor(2) == {"rid": 2, "took_effect": True,
+                                  "result": [2, 3]}
+    # an evicted rid's descriptor left the window with its result
+    assert log2.descriptor(1) == {"rid": 1, "took_effect": False,
+                                  "result": None}
+    assert log2.descriptor(99)["took_effect"] is False
+
+
+def test_restart_trim_retries_failed_unlink_once(tmp_path, monkeypatch):
+    """Satellite: restart-trim of a torn placeholder tolerates one
+    transient unlink failure (retry after backoff) and a *persistent*
+    failure never fails the restart — the file just stays torn."""
+    from pathlib import Path
+    from repro.serving.engine import RequestLog
+    monkeypatch.setattr(RequestLog, "_TRIM_BACKOFF_S", 0.0)
+    (tmp_path / "log_000000.json").write_text('{"1": [1')
+    orig, calls = Path.unlink, []
+
+    def flaky(self, missing_ok=False):
+        if self.name == "log_000000.json":
+            calls.append(1)
+            if len(calls) == 1:
+                raise OSError("EBUSY")
+        return orig(self, missing_ok=missing_ok)
+
+    monkeypatch.setattr(Path, "unlink", flaky)
+    log = RequestLog(tmp_path)                   # restart succeeds
+    assert calls == [1, 1]                       # failed once, retried
+    assert not (tmp_path / "log_000000.json").exists()
+    # persistent failure: restart still succeeds, file left torn
+    (tmp_path / "log_000001.json").write_text('{"2": [2')
+
+    def always_fails(self, missing_ok=False):
+        if self.name == "log_000001.json":
+            raise OSError("EBUSY")
+        return orig(self, missing_ok=missing_ok)
+
+    monkeypatch.setattr(Path, "unlink", always_fails)
+    log2 = RequestLog(tmp_path)
+    assert "log_000001.json" in log2._torn
+    log2.commit({5: [5]})                        # slot derivation stepped
+    assert (tmp_path / "log_000002.json").exists()
+
+
+def test_restart_trim_heals_a_racing_writer_instead(tmp_path,
+                                                    monkeypatch):
+    """Satellite: the torn placeholder seen at restart may be another
+    live instance's in-flight commit — the backoff re-check folds the
+    completed record instead of trimming the writer's work."""
+    import repro.serving.engine as eng_mod
+    from repro.serving.engine import RequestLog
+    p = tmp_path / "log_000000.json"
+    p.write_text('{"7": [7')                     # writer mid-commit
+
+    def writer_lands(_secs):                     # during the backoff...
+        p.write_text('{"7": [7, 8]}')            # ...the fence completes
+
+    monkeypatch.setattr(eng_mod.time, "sleep", writer_lands)
+    log = RequestLog(tmp_path)
+    assert p.exists()                            # never trimmed
+    assert log.committed() == {7: [7, 8]}        # healed into a commit
+    assert bool(log.took_effect([7])[0])
+
+
+def test_serve_engine_snapshot_every(setup, tmp_path):
+    """snapshot_every wires the truncating snapshot into the serving
+    loop: restarts replay only the tail and answers are unchanged."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_len=32, log_dir=tmp_path,
+                      batch_size=2, snapshot_every=1)
+    reqs = _requests(cfg)
+    out = eng.serve(reqs, n_new=4)
+    assert set(out) == set(reqs)
+    assert len(list(tmp_path.glob("snap_*.json"))) == 1
+    assert list(tmp_path.glob("log_*.json")) == []   # all truncated
+    eng2 = ServeEngine(model, params, max_len=32, log_dir=tmp_path,
+                       batch_size=2, snapshot_every=1)
+    assert eng2.log.records_parsed == 0              # O(1) restart
+    assert eng2.serve(reqs, n_new=4) == out          # from the snapshot
+    np.testing.assert_array_equal(eng2.took_effect(sorted(reqs)),
+                                  [True] * len(reqs))
+
+
 def test_serve_results_match_teacher_forcing(setup, tmp_path):
     """The engine's prefill+decode greedy path agrees with running the
     model once over the full (prompt + generated) sequence."""

@@ -39,6 +39,8 @@ DOCTEST_MODULES = [
     "repro.core.rebalance",
     "repro.launch.mesh",
     "repro.persistence.index",
+    "repro.core.pmem",
+    "repro.robustness.faultinject",
 ]
 MIN_DOCTESTS = 6
 

@@ -116,10 +116,19 @@ class PMem:
         self._crashed = False
         # optional repro.robustness.faultinject.CrashPlan: when set,
         # every persistence instruction reports a crash site before
-        # executing (attach via CrashPlan.attach, never set directly)
+        # executing (attach via CrashPlan.attach, never set directly).
+        # Recorders that additionally define ``on_event`` (e.g.
+        # repro.analysis.trace.PersistTrace) receive the *full*
+        # instruction stream, writes included.
         self.faults = None
         # address 0 is reserved (packed null); allocations start at line 1
         self._alloc_cursor = line_words
+
+    def _event(self, kind: str, target: str = "", **meta) -> None:
+        """Report one executed instruction to an attached trace recorder."""
+        cb = getattr(self.faults, "on_event", None) if self.faults else None
+        if cb is not None:
+            cb(kind, target, **meta)
 
     # ------------------------------------------------------------------ #
     # basic instructions                                                  #
@@ -132,15 +141,21 @@ class PMem:
         self.counters.writes += 1
         self.volatile[addr] = value
         self.dirty[addr] = True
+        if self.faults is not None:
+            self._event("write", f"line:{self.line_of(addr)}")
 
     def cas(self, addr: int, expected: int, new: int) -> bool:
         """Atomic compare-and-swap on the volatile view."""
         if self.faults is not None:
             self.faults.on_site("publish", f"addr:{addr}")
+            self._event("publish", f"addr:{addr}")
         self.counters.cas += 1
         if int(self.volatile[addr]) == expected:
             self.volatile[addr] = new
             self.dirty[addr] = True
+            # the successful swing dirties its line like any write
+            if self.faults is not None:
+                self._event("write", f"line:{self.line_of(addr)}")
             return True
         return False
 
@@ -159,6 +174,8 @@ class PMem:
         """
         if self.faults is not None:
             self.faults.on_site("flush", f"line:{self.line_of(addr)}")
+            self._event("flush", f"line:{self.line_of(addr)}",
+                        in_traverse=in_traverse)
         self.counters.flushes += 1
         if in_traverse:
             self.counters.traverse_flushes += 1
@@ -168,6 +185,7 @@ class PMem:
         """sfence: all lines flushed since the previous fence are persisted."""
         if self.faults is not None:
             self.faults.on_site("fence", "")
+            self._event("fence", in_traverse=in_traverse)
         self.counters.fences += 1
         if in_traverse:
             self.counters.traverse_fences += 1

@@ -135,8 +135,10 @@ def main() -> None:
                        seed=args.seed)
     print(json.dumps({k: v for k, v in out.items() if k != "losses"},
                      indent=1))
-    if "final_loss" in out:
+    if out.get("final_loss") is not None:
         print(f"final loss: {out['final_loss']:.4f}")
+    else:
+        print("final loss: n/a (already at target step)")
 
 
 if __name__ == "__main__":

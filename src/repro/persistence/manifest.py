@@ -55,25 +55,37 @@ class StagedIO:
         # optional repro.robustness.faultinject.CrashPlan: when set,
         # every persistence instruction (flush/fence/publish/trim)
         # reports a crash site before executing (attach via
-        # CrashPlan.attach, never set directly)
+        # CrashPlan.attach, never set directly).  Recorders that
+        # additionally define ``on_event`` (repro.analysis.trace.
+        # PersistTrace) receive the full stream, writes included.
         self.faults = None
+
+    def _event(self, kind: str, target: str = "", **meta) -> None:
+        """Report one executed instruction to an attached trace recorder."""
+        cb = getattr(self.faults, "on_event", None) if self.faults else None
+        if cb is not None:
+            cb(kind, target, **meta)
 
     # -- volatile writes -------------------------------------------------- #
     def write(self, rel: str, data: bytes) -> None:
         self._staged[rel] = data
         self.counters.writes += 1
         self.counters.bytes_staged += len(data)
+        if self.faults is not None:
+            self._event("write", rel)
 
     def flush(self, rel: str) -> None:
         if rel in self._staged:
             if self.faults is not None:
                 self.faults.on_site("flush", rel)
+                self._event("flush", rel)
             self._flushed.add(rel)
             self.counters.flushes += 1
 
     def fence(self) -> None:
         if self.faults is not None:
             self.faults.on_site("fence", "")
+            self._event("fence")
         self.counters.fences += 1
         for rel in sorted(self._flushed):
             data = self._staged.pop(rel, None)
@@ -91,6 +103,7 @@ class StagedIO:
         file must already be fenced."""
         if self.faults is not None:
             self.faults.on_site("publish", final_rel)
+            self._event("publish", final_rel, src=tmp_rel)
         os.replace(self.root / tmp_rel, self.root / final_rel)
 
     # -- crash adversary --------------------------------------------------- #
@@ -125,11 +138,13 @@ class StagedIO:
         between any two unlinks of a truncation pass."""
         if self.faults is not None:
             self.faults.on_site("trim", rel)
+            self._event("trim", rel)
         (self.root / rel).unlink(missing_ok=True)
 
     def remove_tree(self, rel: str) -> None:
         if self.faults is not None:
             self.faults.on_site("trim", rel)
+            self._event("trim", rel)
         shutil.rmtree(self.root / rel, ignore_errors=True)
 
 

@@ -1,6 +1,21 @@
-"""Systematic crash-fault injection for the durable layers."""
-from .faultinject import (CrashPlan, CrashPoint, CrashSite, SCENARIOS,
-                          enumerate_sites, sweep)
+"""Systematic crash-fault injection for the durable layers.
 
-__all__ = ["CrashPlan", "CrashPoint", "CrashSite", "SCENARIOS",
+:data:`KINDS` is **the** crash-site kind registry: every persistence
+instruction an instrumented IO object can report — to a
+:class:`~repro.robustness.faultinject.CrashPlan` (crash injection) or a
+:class:`~repro.analysis.trace.PersistTrace` (ordering analysis) — must
+carry one of these kinds.  Both consumers validate against this one
+tuple, so an unknown kind fails loudly everywhere instead of silently
+registering an un-sweepable site.
+"""
+
+#: The shared crash-site kind registry (defined here, *before* the
+#: faultinject import below, so ``from . import KINDS`` inside the
+#: submodule resolves against this partially-initialized package).
+KINDS = ("flush", "fence", "publish", "trim")
+
+from .faultinject import (CrashPlan, CrashPoint, CrashSite,  # noqa: E402
+                          SCENARIOS, enumerate_sites, sweep)
+
+__all__ = ["KINDS", "CrashPlan", "CrashPoint", "CrashSite", "SCENARIOS",
            "enumerate_sites", "sweep"]

@@ -45,7 +45,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-KINDS = ("flush", "fence", "publish", "trim")
+from . import KINDS
 
 
 @dataclasses.dataclass(frozen=True)

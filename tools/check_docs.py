@@ -41,6 +41,8 @@ DOCTEST_MODULES = [
     "repro.persistence.index",
     "repro.core.pmem",
     "repro.robustness.faultinject",
+    "repro.analysis.persistlint",
+    "repro.analysis.checker",
 ]
 MIN_DOCTESTS = 6
 

@@ -1,0 +1,98 @@
+"""Subprocess worker for the compile-attribution part of ``bench_nvt``'s
+``obs`` section.
+
+Run as ``python -m benchmarks.obs_worker N_DEV``: forces ``N_DEV`` host
+platform devices (the flag must land before jax initializes, which is
+why this is a subprocess of the parent bench) and exercises both
+recompile triggers the :class:`repro.obs.compile.CompileTracker` knows
+how to attribute on the live sharded-map path:
+
+  * **resplit_width_change** — the zipf-skewed stream from the
+    ``rebalance_live`` bench drives a :class:`RebalancingShardedMap`
+    with the auto policy armed; the re-split changes the max range
+    width, the ``shard_map`` closures miss their cache, and the first
+    calls on the new geometry are timed inside the rebalance engine's
+    ``reason("resplit_width_change")`` blocks.
+  * **capacity_ladder** — an explicit ``migrate_to(capacity=2x)`` drain
+    afterwards, recorded under ``reason("capacity_ladder")``.
+
+Stdout is one JSON document: per-trigger ``{events, stall_us}`` totals
+(``compile``), the individual :class:`CompileEvent` records, how many
+re-splits actually completed, and the post-stream ``map_load_imbalance``
+gauge — everything the parent needs to attribute the ROADMAP's re-split
+recompile tax.
+"""
+import json
+import os
+import re
+import sys
+import time
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1])
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       os.environ.get("XLA_FLAGS", "")).strip()
+    os.environ["XLA_FLAGS"] = (
+        inherited
+        + f" --xla_force_host_platform_device_count={n_dev}").strip()
+    import numpy as np
+    from repro.core import batched as B
+    from repro.core.rebalance import (AutoRebalancePolicy,
+                                      RebalancingShardedMap)
+    from repro.obs.compile import get_tracker
+    from repro.obs.metrics import get_registry
+
+    S, NB = n_dev, 128
+    CAP, BATCH, ROUNDS = 1 << 15, 1024, 24
+    rng = np.random.default_rng(5)
+
+    # same adversarial stream as benchmarks/rebalance_worker.py: zipf
+    # ranks mapped onto keys sorted by global bucket, so the hot keys
+    # concentrate in the low ranges and the auto policy must re-split
+    domain = np.arange(1, 20001, dtype=np.int32)
+    by_bucket = domain[np.argsort(B.bucket_of_np(domain, NB),
+                                  kind="stable")]
+
+    def draw(n):
+        ranks = np.minimum(rng.zipf(1.3, size=n), domain.size) - 1
+        return by_bucket[ranks]
+
+    trk = get_tracker()
+    trk.reset()
+    m = RebalancingShardedMap(
+        S, capacity=CAP, n_buckets=NB, rounds_per_update=2,
+        policy=AutoRebalancePolicy(threshold=1.3, min_load=4096,
+                                   check_every=2))
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        ops = rng.integers(0, 2, BATCH).astype(np.int32)
+        m.update(ops, draw(BATCH),
+                 rng.integers(0, 1000, BATCH).astype(np.int32))
+    if m.rebalancing:
+        m.run_rebalance()
+    stream_s = time.perf_counter() - t0
+
+    # one explicit capacity-ladder step on the (now re-split) inner map:
+    # the new pool's shapes miss every warm signature and the drain's
+    # first calls land under reason("capacity_ladder")
+    m2, _ = m.map.migrate_to(capacity=2 * CAP)
+
+    json.dump({
+        "devices": S,
+        "n_buckets": NB,
+        "batches": ROUNDS,
+        "stream_s": stream_s,
+        "rebalances": m.rebalances_completed,
+        "splits_final": list(m.splits),
+        "final_capacity": m2.capacity,
+        "compile": trk.stats(),
+        "events": [ev.to_dict() for ev in trk.events],
+        "load_imbalance_gauge": get_registry().gauge(
+            "map_load_imbalance").value,
+    }, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

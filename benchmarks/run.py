@@ -546,6 +546,213 @@ def bench_nvt_restart(rows, out_json="BENCH_nvt.json",
                  f"{section['took_effect_no_replay']}"))
 
 
+def bench_nvt_obs(rows, out_json="BENCH_nvt.json",
+                  snap_path="OBS_metrics.json"):
+    """NVTrace observability section: what the instrumentation *sees*
+    and what it *costs*, merged under ``out_json["obs"]``.
+
+    Four sub-reports:
+
+    * ``serving`` — a tiny qwen2-family :class:`ServeEngine` on a fresh
+      registry serves a measured request wave (after a warmup wave that
+      absorbs the jit compiles); ``serve_request_us`` yields p50/p99,
+      the ``span_us{phase=...}`` histograms yield the per-phase (route /
+      plan / commit / flush_fence / publish / snapshot) breakdown, and
+      the span persistence counts exhibit the paper's asymmetry at
+      runtime: the traversal phases (``route``/``plan``) charge **zero**
+      persistence instructions, the commit/snapshot phases pay all of
+      them (``traversal_free_persistence``).
+    * ``consistency`` — the same RequestLog workload runs once under a
+      :class:`repro.obs.spans.FaultsTee` feeding both a ``PersistTrace``
+      and the span listener; the tracer's lifetime totals, the
+      per-finished-span sums, and the trace's per-kind event counts must
+      agree exactly (the two observability layers cross-validate on an
+      identical run).
+    * ``overhead`` — a mixed 50%-update serving point (alternating
+      single-rid ``commit`` / ``took_effect`` probe) timed best-of
+      interleaved with ``obs=True`` vs ``obs=False``; the enabled /
+      disabled us/op ratio is the instrumentation tax CI bounds at 5%.
+    * ``compile`` — ``benchmarks/obs_worker.py`` on 2 forced host
+      devices: the zipf-skewed rebalance_live stream plus one explicit
+      capacity step, with every first-call XLA stall attributed to its
+      trigger (re-split width change vs capacity ladder vs steady).
+
+    The measured serving registry is also dumped to ``snap_path`` — the
+    artifact the CI obs lane uploads and ``tools/metrics_dump.py``
+    smoke-reads."""
+    import json
+    import tempfile
+    from collections import Counter
+    from pathlib import Path
+
+    import jax
+    import numpy as np
+
+    from repro.analysis.trace import PersistTrace
+    from repro.configs.registry import get_arch, tiny
+    from repro.models.model import build_model
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.spans import FaultsTee, Tracer
+    from repro.serving.engine import RequestLog, ServeEngine
+
+    PHASES = ("route", "plan", "commit", "flush_fence", "publish",
+              "snapshot")
+    TRAVERSAL, PERSISTING = ("route", "plan"), ("commit", "snapshot")
+
+    # ---- serving latency + per-phase breakdown ----------------------
+    cfg = tiny(get_arch("qwen2-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def wave(base, n=24):
+        return {base + i: rng.integers(0, cfg.vocab, size=12)
+                .astype(np.int32) for i in range(n)}
+
+    reg = MetricsRegistry()
+    with tempfile.TemporaryDirectory() as d:
+        eng = ServeEngine(model, params, max_len=32, log_dir=d,
+                          batch_size=4, retain=64, snapshot_every=4,
+                          registry=reg)
+        eng.serve(wave(10_000, n=8), n_new=4)     # warmup: jit compiles
+        reg.reset()                               # measure steady-state
+        eng.serve(wave(0), n_new=4)
+        lat = reg.histogram("serve_request_us", lo=1.0, hi=1e8,
+                            growth=1.25)
+        phases = {}
+        for ph in PHASES:
+            h = reg.histogram("span_us", lo=0.1, hi=1e8, growth=1.25,
+                              phase=ph)
+            if h.count:
+                phases[ph] = {"count": h.count,
+                              "p50_us": h.quantile(0.5),
+                              "p99_us": h.quantile(0.99)}
+        by_phase = {ph: 0 for ph in PHASES}
+        for r in eng.tracer.records():
+            by_phase[r["span"]] = (by_phase.get(r["span"], 0)
+                                   + sum(r["counts"].values()))
+        serving = {
+            "requests": lat.count,
+            "p50_us": lat.quantile(0.5),
+            "p99_us": lat.quantile(0.99),
+            "phases": phases,
+            "persist_events_by_phase": by_phase,
+            # the paper's claim, live: traversal phases persist nothing
+            "traversal_free_persistence": (
+                all(by_phase[p] == 0 for p in TRAVERSAL)
+                and sum(by_phase[p] for p in PERSISTING) > 0),
+        }
+        reg.dump_json(snap_path)
+
+    # ---- span counts vs PersistTrace on an identical run ------------
+    reg2 = MetricsRegistry()
+    tracer = Tracer(registry=reg2)
+    with tempfile.TemporaryDirectory() as d:
+        log = RequestLog(d, registry=reg2, tracer=tracer)
+        trace = PersistTrace()
+        FaultsTee(trace, log.io.faults).attach(log.io)
+        rid = 0
+        with tracer.span("workload"):
+            for b in range(8):
+                log.commit({rid + i: [rid + i] for i in range(4)},
+                           evict=log.expired_rids(16))
+                rid += 4
+                if (b + 1) % 3 == 0:
+                    log.snapshot()
+        by_kind = dict(Counter(e.kind for e in trace.events))
+    consistency = {
+        "trace_events": by_kind,
+        "tracer_totals": dict(tracer.totals),
+        "span_counts": dict(tracer.span_counts),
+        "span_trace_consistent": (tracer.totals == by_kind
+                                  and tracer.span_counts == by_kind),
+    }
+
+    # ---- instrumentation overhead, mixed 50%-update point -----------
+    # Paired interleaved measurement: the same op runs back-to-back on
+    # an obs=True and an obs=False log (order alternating per op class
+    # to cancel fs-commit batching effects), and the estimate is the
+    # *median of per-pair differences* — commit latency on a real fs is
+    # noisy enough that independently-timed runs cannot resolve a
+    # few-percent delta, but paired differences can.
+    STEPS, BATCH, TRIALS = 900, 4, 3
+
+    def overhead_trial():
+        lr = np.random.default_rng(7)
+        with tempfile.TemporaryDirectory() as da, \
+                tempfile.TemporaryDirectory() as db:
+            logs = {True: RequestLog(da, registry=MetricsRegistry(),
+                                     obs=True),
+                    False: RequestLog(db, registry=MetricsRegistry(),
+                                      obs=False)}
+            for log in logs.values():
+                log.commit({-1: [0]})             # warm the io path
+            diff = {"c": [], "p": []}
+            base = {"c": [], "p": []}
+            rid = 0
+            seen = {"c": 0, "p": 0}
+            for step in range(STEPS):
+                cls = "c" if step % 2 == 0 else "p"
+                order = ((True, False) if seen[cls] % 2 == 0
+                         else (False, True))
+                seen[cls] += 1
+                t = {}
+                if cls == "c":                    # 50% updates...
+                    batch = {rid + j: [rid + j] for j in range(BATCH)}
+                    rid += BATCH
+                    for obs in order:
+                        t0 = time.perf_counter_ns()
+                        logs[obs].commit(batch)
+                        t[obs] = time.perf_counter_ns() - t0
+                else:                             # ...50% probes
+                    probes = [int(x)
+                              for x in lr.integers(0, rid, size=BATCH)]
+                    for obs in order:
+                        t0 = time.perf_counter_ns()
+                        logs[obs].took_effect(probes)
+                        t[obs] = time.perf_counter_ns() - t0
+                diff[cls].append(t[True] - t[False])
+                base[cls].append(t[False])
+            off_us = (np.median(base["c"]) + np.median(base["p"])) \
+                / 2 / 1e3
+            delta_us = (np.median(diff["c"]) + np.median(diff["p"])) \
+                / 2 / 1e3
+            return off_us, delta_us
+
+    trials = sorted((overhead_trial() for _ in range(TRIALS)),
+                    key=lambda t: t[1] / t[0])
+    off_us, delta_us = trials[TRIALS // 2]        # median trial
+    overhead = {
+        "ops": STEPS, "batch": BATCH, "trials": TRIALS,
+        "disabled_us_per_op": off_us,
+        "enabled_us_per_op": off_us + delta_us,
+        "delta_us_per_op": delta_us,
+        "ratio": 1 + delta_us / off_us,
+    }
+
+    # ---- compile-stall attribution (2 forced host devices) ----------
+    print("# obs worker: 2 host devices...", file=sys.stderr)
+    compile_rep = _run_worker("benchmarks.obs_worker", 2)
+    compile_rep["by_trigger"] = compile_rep.pop("compile")
+
+    report = _load_report(out_json)
+    report["obs"] = {"serving": serving, "consistency": consistency,
+                     "overhead": overhead, "compile": compile_rep,
+                     "metrics_snapshot": snap_path}
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# merged obs section into {out_json}", file=sys.stderr)
+    rows.append(("nvt,obs_serve_p50", serving["p50_us"],
+                 f"p99={serving['p99_us']:.0f}us;"
+                 f"traversal_free={serving['traversal_free_persistence']}"))
+    rows.append(("nvt,obs_overhead_ratio", overhead["ratio"],
+                 f"enabled={overhead['enabled_us_per_op']:.1f}us;"
+                 f"disabled={overhead['disabled_us_per_op']:.1f}us"))
+    for trig, st in sorted(compile_rep["by_trigger"].items()):
+        rows.append((f"nvt,obs_compile_{trig}", st["stall_us"],
+                     f"events={st['events']}"))
+
+
 def bench_checkpoint(rows):
     """NVTraverse commit vs fence-per-write baseline (paper insight at
     framework scale) on a ~25M-param pytree."""
@@ -628,7 +835,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
                          "fig6,hashmap,batched,nvt,migrate,sharded,"
-                         "rebalance_live,restart,ckpt,kernels,roofline")
+                         "rebalance_live,restart,obs,ckpt,kernels,"
+                         "roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -646,6 +854,8 @@ def main() -> None:
         bench_nvt_rebalance_live(rows)
     if only is None or "restart" in only:
         bench_nvt_restart(rows)
+    if only is None or "obs" in only:
+        bench_nvt_obs(rows)
     if only is None or "ckpt" in only:
         bench_checkpoint(rows)
     if only is None or "kernels" in only:

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import io as _io
 import json
+import time
 from pathlib import Path
 from typing import NamedTuple, Optional, Tuple
 
@@ -62,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import batched as B
+from ..obs.compile import get_tracker
+from ..obs.metrics import get_registry
 
 _NIL = int(B.NIL)
 
@@ -250,13 +253,30 @@ def items_of_host(old: dict) -> dict:
 
 
 def _run_batch(state, ops, ks, vs, n_buckets: int):
-    """One padded plan/commit round; returns (state', ok, stats)."""
+    """One padded plan/commit round; returns (state', ok, stats).
+
+    This is the capacity-ladder jit seam: ``update_parallel`` retraces
+    on every fresh (pool capacity, n_buckets, padded batch width)
+    signature, so the NVTrace compile tracker times the first call per
+    signature and attributes the stall to the active reason (a
+    ``MigratingMap`` growth step declares ``capacity_ladder``)."""
     n = ks.shape[0]
     if n == 0:
         return state, np.zeros(0, np.bool_), None
     (po, pk, pv), valid = _pad_pow2(ops, ks, vs)
-    state, ok, stats = B.update_parallel(state, po, pk, pv, n_buckets,
-                                         valid=valid)
+    trk = get_tracker()
+    sig = (int(state.key.shape[0]), n_buckets, int(po.shape[0]))
+    if trk.enabled and trk.first_seen("migrate.update_parallel", sig):
+        t0 = time.perf_counter()
+        state, ok, stats = B.update_parallel(state, po, pk, pv,
+                                             n_buckets, valid=valid)
+        ok.block_until_ready()
+        trk.record("migrate.update_parallel",
+                   f"cap={sig[0]},nb={n_buckets},n={sig[2]}",
+                   (time.perf_counter() - t0) * 1e6)
+    else:
+        state, ok, stats = B.update_parallel(state, po, pk, pv,
+                                             n_buckets, valid=valid)
     return state, np.asarray(ok)[:n], stats
 
 
@@ -503,7 +523,9 @@ class MigratingMap:
             ex, _, _ = _probe_np(m["new"], ks, m["nb_new"])
             ks, vs = ks[~ex], vs[~ex]
         ops = np.zeros(ks.shape[0], np.int32)
-        m["new"], ok, _ = _run_batch(m["new"], ops, ks, vs, m["nb_new"])
+        with get_tracker().reason("capacity_ladder"):
+            m["new"], ok, _ = _run_batch(m["new"], ops, ks, vs,
+                                         m["nb_new"])
         if not ok.all():      # not assert: must survive python -O too
             raise RuntimeError(
                 "migration drain dropped keys (new pool undersized: "
@@ -513,8 +535,11 @@ class MigratingMap:
         m["migrated"] += int(ks.shape[0])
         m["skipped"] += int(n_live - ks.shape[0])
         m["remaining_live"] -= n_live
-        self.rounds_total += 1
+        self.rounds_total += 1     # per-instance shims; registry mirror:
         self.migrated_total += int(ks.shape[0])
+        get_registry().counter("map_migration_rounds_total").inc()
+        get_registry().counter("map_migrated_keys_total").inc(
+            int(ks.shape[0]))
         if hi >= self.n_buckets:
             self._finish_migration()
             return True
@@ -552,7 +577,8 @@ class MigratingMap:
         self.capacity, self.n_buckets = m["cap_new"], m["nb_new"]
         self._mig = None
         self._journal = None
-        self.migrations_completed += 1
+        self.migrations_completed += 1   # shim; registry mirror:
+        get_registry().counter("map_migrations_total").inc()
 
     def _commit_migrating(self, ops, ks, vs) -> np.ndarray:
         """Commit a user batch into the new table as one mixed round of
@@ -582,13 +608,15 @@ class MigratingMap:
             [np.full(pull_ks.size, B.OP_INSERT, np.int32), ops])
         bks = np.concatenate([pull_ks, ks])
         bvs = np.concatenate([pull_vs, vs])
-        m["new"], ok, self.last_stats = _run_batch(
-            m["new"], bops, bks, bvs, m["nb_new"])
+        with get_tracker().reason("capacity_ladder"):
+            m["new"], ok, self.last_stats = _run_batch(
+                m["new"], bops, bks, bvs, m["nb_new"])
         if not ok[:pull_ks.size].all():   # not assert: survive python -O
             raise RuntimeError("migration pull dropped keys "
                                "(reserve accounting bug)")
         self._journal_round(bops, bks, bvs, m["frontier"])
-        self.pulls_total += int(pull_ks.size)
+        self.pulls_total += int(pull_ks.size)   # shim; registry mirror:
+        get_registry().counter("map_pulls_total").inc(int(pull_ks.size))
         return ok[pull_ks.size:]
 
     # ---------------- crash recovery ----------------------------------- #

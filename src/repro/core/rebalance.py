@@ -61,6 +61,8 @@ import jax
 import numpy as np
 
 from . import batched as B
+from ..obs.compile import get_tracker
+from ..obs.metrics import get_registry
 from .migrate import RoundJournal, drain_range
 from .sharded import RebalanceReport, ShardedDurableMap
 
@@ -345,6 +347,16 @@ class RebalancingShardedMap:
             return
         self.loads += np.asarray(stats.bucket_flushes, np.int64)
         self._updates_since_check += 1
+        # NVTrace gauges, from the same numbers the auto policy reads:
+        # per-shard accumulated flush load and the hottest-shard ratio
+        per = np.add.reduceat(self.loads, np.asarray(self.splits[:-1]))
+        total = float(per.sum())
+        m = get_registry()
+        for s, v in enumerate(per):
+            m.gauge("map_shard_load", shard=str(s)).set(float(v))
+        if total > 0:
+            m.gauge("map_load_imbalance").set(
+                float(per.max()) / (total / len(per)))
 
     def _maybe_trigger(self) -> None:
         p = self.policy
@@ -368,8 +380,10 @@ class RebalancingShardedMap:
             # decline, and re-plan only after fresh load accumulates
             # (an explicit start_rebalance still raises).
             self.loads[:] = 0
+            get_registry().counter("map_rebalance_declined_total").inc()
             return
         self.last_trigger_imbalance = imbalance
+        get_registry().gauge("map_trigger_imbalance").set(imbalance)
 
     def imbalance(self) -> float:
         """Hottest shard's share of the accumulated load, normalized so
@@ -471,11 +485,13 @@ class RebalancingShardedMap:
                 r["new"].owners_of(ks), minlength=self.map.n_shards)
             # new-authoritative filter: keys user traffic already pulled
             # (or re-inserted, or deleted) must not be re-migrated
-            ex, _, _ = r["new"].probe(ks)
+            with get_tracker().reason("resplit_width_change"):
+                ex, _, _ = r["new"].probe(ks)
             ks, vs = ks[~ex], vs[~ex]
         ops = np.zeros(ks.size, np.int32)          # all OP_INSERT
         if ks.size:
-            ok, stats = r["new"].insert(ks, vs)
+            with get_tracker().reason("resplit_width_change"):
+                ok, stats = r["new"].insert(ks, vs)
             if not ok.all():   # not assert: must survive python -O too
                 raise RuntimeError(
                     f"rebalance drain dropped keys at global bucket "
@@ -487,8 +503,11 @@ class RebalancingShardedMap:
         r["drain_rounds"] += 1
         r["migrated"] += int(ks.size)
         r["skipped"] += n_cand - int(ks.size)
-        self.rounds_total += 1
+        self.rounds_total += 1     # per-instance shims; registry mirror:
         self.migrated_total += int(ks.size)
+        get_registry().counter("map_rebalance_rounds_total").inc()
+        get_registry().counter("map_rebalanced_keys_total").inc(
+            int(ks.size))
         if hi >= nb:
             self._finish()
             return True
@@ -522,7 +541,8 @@ class RebalancingShardedMap:
         # must not immediately re-fire against the corrected boundaries
         self.loads[:] = 0
         self._updates_since_check = 0
-        self.rebalances_completed += 1
+        self.rebalances_completed += 1   # shim; registry mirror:
+        get_registry().counter("map_rebalances_total").inc()
 
     def _commit_rebalancing(self, ops, ks, vs):
         """Commit a user batch into the new map as one mixed routed
@@ -531,7 +551,8 @@ class RebalancingShardedMap:
         r = self._reb
         new = r["new"]
         uniq = np.unique(ks)
-        ex_new, _, _ = new.probe(uniq)
+        with get_tracker().reason("resplit_width_change"):
+            ex_new, _, _ = new.probe(uniq)
         cand = uniq[~ex_new]
         _, live_old, val_old = self.map.probe(cand)
         pull_ks = cand[live_old]
@@ -561,14 +582,16 @@ class RebalancingShardedMap:
         bvs = np.concatenate([pull_vs, vs])
         if bks.size == 0:
             return np.zeros(0, np.bool_), None
-        ok, stats = new.update(bops, bks, bvs)
+        with get_tracker().reason("resplit_width_change"):
+            ok, stats = new.update(bops, bks, bvs)
         if not ok[:pull_ks.size].all():  # not assert: survive python -O
             raise RuntimeError("rebalance pull dropped keys "
                                "(reserve accounting bug)")
         r["foreign"] += int(np.sum(np.asarray(stats.foreign_ops)))
         r["bf"] += np.asarray(stats.bucket_flushes)
         self._journal_round(bops, bks, bvs, r["frontier"])
-        self.pulls_total += int(pull_ks.size)
+        self.pulls_total += int(pull_ks.size)   # shim; registry mirror:
+        get_registry().counter("map_pulls_total").inc(int(pull_ks.size))
         self._note(stats)
         return ok[pull_ks.size:], stats
 

@@ -67,6 +67,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import batched
+from ..obs.compile import get_tracker
+from ..obs.metrics import get_registry
 
 AXIS = "shards"
 
@@ -349,6 +351,18 @@ class ShardedDurableMap:
             jnp.asarray(self.sizes, jnp.int32), shard1)
         self._update_fn, self._lookup_fn = _build_fns(
             mesh, S, n_buckets, NBM)
+        # NVTrace compile seam: a (mesh, S, n_buckets, nb_max) miss above
+        # is only *built* here — the XLA compile stall lands on the first
+        # call per argument-shape signature, which the tracker times and
+        # attributes to the active reason (re-split width change,
+        # capacity-ladder step, or "steady" cold start)
+        trk = get_tracker()
+        cfg = f"S={S},nb={n_buckets},nb_max={NBM}"
+        self._update_fn = trk.instrument("sharded.update", cfg,
+                                         self._update_fn)
+        self._lookup_fn = trk.instrument("sharded.lookup", cfg,
+                                         self._lookup_fn)
+        self._metrics = get_registry()
 
     # ---------------- host API --------------------------------------- #
     def _pad(self, *arrs: np.ndarray):
@@ -384,7 +398,26 @@ class ShardedDurableMap:
             self.n_shards, self.nb_max)
         stats = stats._replace(bucket_flushes=np.concatenate(
             [bf[s, :w] for s, w in enumerate(self.sizes)]))
+        self._export_stats(stats)
         return np.asarray(ok)[:n], stats
+
+    def _export_stats(self, stats: ShardCommitStats) -> None:
+        """Mirror one round's commit accounting onto the NVTrace
+        registry (the satellite that gives `CommitStats` sums, foreign
+        ops and per-shard load one read path): cumulative flush/fence
+        totals, the routing invariant, and per-shard committed-op load."""
+        m = self._metrics
+        committed = np.asarray(stats.ops_committed)
+        m.counter("map_commit_ops_total").inc(int(committed.sum()))
+        m.counter("map_commit_flushes_total").inc(
+            int(np.asarray(stats.coalesced_flushes).sum()))
+        m.counter("map_commit_fences_total").inc(
+            int(np.asarray(stats.coalesced_fences).max(initial=0)))
+        m.counter("map_foreign_ops_total").inc(
+            int(np.asarray(stats.foreign_ops).sum()))
+        for s in range(self.n_shards):
+            m.counter("map_shard_ops_total", shard=str(s)).inc(
+                int(committed[s]))
 
     def owners_of(self, ks) -> np.ndarray:
         """Owner shard of each key under the current split (host-side
@@ -536,9 +569,15 @@ class ShardedDurableMap:
                     f"n_buckets={nb_new} is not a multiple of the "
                     f"current {self.n_buckets}; pass splits= explicitly "
                     f"to re-shape the ranges")
-        new = ShardedDurableMap(
-            self.n_shards, capacity=capacity or self.capacity,
-            n_buckets=nb_new, mesh=self.mesh, splits=splits)
+        # compile attribution: a geometry change here is what buys the
+        # recompile — a capacity/bucket step is the ladder, a pure
+        # boundary move is the re-split width change the ROADMAP taxes
+        reason = ("capacity_ladder" if (capacity or n_buckets)
+                  else "resplit_width_change")
+        with get_tracker().reason(reason):
+            new = ShardedDurableMap(
+                self.n_shards, capacity=capacity or self.capacity,
+                n_buckets=nb_new, mesh=self.mesh, splits=splits)
         bpr = buckets_per_round or max(1, self.n_buckets // 8)
         chain_before = self.chain_stats()
         host = jax.device_get(self.state)
@@ -549,29 +588,33 @@ class ShardedDurableMap:
                       for s in range(self.n_shards)]
         rounds = migrated = foreign = 0
         bf_total = np.zeros(new.n_buckets, np.int64)
-        for lo in range(0, self.n_buckets, bpr):
-            hi = min(lo + bpr, self.n_buckets)
-            parts = []
-            for s in range(self.n_shards):      # split order = global
-                a = max(lo, self.splits[s])     # bucket-ascending order
-                b = min(hi, self.splits[s + 1])
-                if a < b:
-                    parts.append(drain_range(
-                        shard_host[s], a - self.splits[s],
-                        b - self.splits[s]))
-            ks = np.concatenate([p[0] for p in parts])
-            vs = np.concatenate([p[1] for p in parts])
-            rounds += 1
-            if not ks.size:
-                continue
-            ok, stats = new.insert(ks, vs)
-            if not ok.all():
-                raise RuntimeError(
-                    f"rebalance drain overflowed the new pool at "
-                    f"global bucket {lo} (capacity {new.capacity})")
-            migrated += int(ks.size)
-            foreign += int(np.sum(np.asarray(stats.foreign_ops)))
-            bf_total += np.asarray(stats.bucket_flushes)
+        with get_tracker().reason(reason):  # drain pays the first calls
+            for lo in range(0, self.n_buckets, bpr):
+                hi = min(lo + bpr, self.n_buckets)
+                parts = []
+                for s in range(self.n_shards):  # split order = global
+                    a = max(lo, self.splits[s])  # bucket-ascending order
+                    b = min(hi, self.splits[s + 1])
+                    if a < b:
+                        parts.append(drain_range(
+                            shard_host[s], a - self.splits[s],
+                            b - self.splits[s]))
+                ks = np.concatenate([p[0] for p in parts])
+                vs = np.concatenate([p[1] for p in parts])
+                rounds += 1
+                if not ks.size:
+                    continue
+                ok, stats = new.insert(ks, vs)
+                if not ok.all():
+                    raise RuntimeError(
+                        f"rebalance drain overflowed the new pool at "
+                        f"global bucket {lo} (capacity {new.capacity})")
+                migrated += int(ks.size)
+                foreign += int(np.sum(np.asarray(stats.foreign_ops)))
+                bf_total += np.asarray(stats.bucket_flushes)
+        m = get_registry()
+        m.counter("map_drain_rounds_total").inc(rounds)
+        m.counter("map_drained_keys_total").inc(migrated)
         return new, RebalanceReport(
             rounds=rounds, migrated=migrated, foreign_ops=foreign,
             bucket_flushes=bf_total.astype(np.int32),

@@ -1,0 +1,23 @@
+"""NVTrace: runtime observability for the serving + durable-map stack.
+
+Three pieces, one theme — make the paper's phase asymmetry (traversal
+persists nothing; every fence lands at the destination) *measurable on
+a live process* instead of only provable by crash sweeps and lint:
+
+* :mod:`repro.obs.metrics` — counters / gauges / log-bucket histograms
+  in a mergeable, snapshottable registry.
+* :mod:`repro.obs.spans` — nested phase spans whose per-span
+  flush/fence/publish counts ride the existing ``faults`` hook surface.
+* :mod:`repro.obs.compile` — first-call jit/shard_map stall tracking
+  with trigger attribution (re-split width change, capacity ladder).
+"""
+from .compile import CompileEvent, CompileTracker, get_tracker
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry)
+from .spans import FaultsTee, PersistListener, Span, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
+    "Span", "Tracer", "PersistListener", "FaultsTee",
+    "CompileEvent", "CompileTracker", "get_tracker",
+]

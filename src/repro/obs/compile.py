@@ -1,0 +1,143 @@
+"""NVTrace compile-event tracking: who paid for that recompile?
+
+The durable-map stack has two jit seams where a shape change silently
+buys a fresh XLA compile on the serving path:
+
+* ``core/sharded.py`` — the ``shard_map`` update/lookup closures are
+  cached per ``(n_shards, n_buckets, nb_max)``; a re-split that changes
+  the **max range width** misses the cache and recompiles (the 315
+  us/op ``rebalance_live`` tax on the ROADMAP).
+* ``core/migrate.py`` — ``update_parallel`` is jitted with static
+  ``n_buckets``; every capacity-ladder step (and every new padded
+  batch width) retraces.
+
+:class:`CompileTracker` wraps those seams.  Callers that *know why* a
+compile is about to happen declare it with ``tracker.reason(...)``
+(``"resplit_width_change"``, ``"capacity_ladder"``); any first call on
+a never-seen ``(site, static-key, arg-shapes)`` signature is timed to
+a blocking result and recorded as a :class:`CompileEvent` attributed
+to the innermost active reason (``"steady"`` when none — i.e. a
+cold-start compile, not a stall anyone caused).  Steady-state calls on
+warm signatures pay one set lookup.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+@dataclass
+class CompileEvent:
+    """One first-call stall on a fresh jit/shard_map signature."""
+    site: str          # e.g. "sharded.update", "migrate.update_parallel"
+    key: str           # static config part of the signature
+    trigger: str       # "resplit_width_change" | "capacity_ladder" | ...
+    stall_us: float
+
+    def to_dict(self) -> dict:
+        return {"site": self.site, "key": self.key,
+                "trigger": self.trigger, "stall_us": self.stall_us}
+
+
+def _shape_sig(args, kwargs):
+    import jax
+    leaves = jax.tree_util.tree_leaves((args, kwargs))
+    return tuple((tuple(x.shape), str(x.dtype)) if hasattr(x, "shape")
+                 else x if isinstance(x, (int, float, str, bool, type(None)))
+                 else type(x).__name__
+                 for x in leaves)
+
+
+class CompileTracker:
+    """First-call stall recorder with trigger attribution."""
+
+    def __init__(self, registry=None):
+        if registry is None:
+            from .metrics import get_registry
+            registry = get_registry()
+        self.registry = registry
+        self.enabled = True
+        self.events = []
+        self._seen = set()
+        self._reasons = []
+
+    # -- attribution --------------------------------------------------
+    @property
+    def current_reason(self) -> str:
+        return self._reasons[-1] if self._reasons else "steady"
+
+    @contextmanager
+    def reason(self, trigger: str):
+        """Attribute compiles inside the block to ``trigger``."""
+        self._reasons.append(trigger)
+        try:
+            yield
+        finally:
+            self._reasons.pop()
+
+    # -- recording ----------------------------------------------------
+    def first_seen(self, site: str, key) -> bool:
+        """True exactly once per (site, key); marks the pair seen."""
+        sig = (site, key)
+        if sig in self._seen:
+            return False
+        self._seen.add(sig)
+        return True
+
+    def record(self, site: str, key, stall_us: float,
+               trigger: str = None) -> None:
+        trigger = trigger if trigger is not None else self.current_reason
+        ev = CompileEvent(site, str(key), trigger, float(stall_us))
+        self.events.append(ev)
+        self.registry.counter("compile_events_total",
+                              site=site, trigger=trigger).inc()
+        self.registry.counter("compile_stall_us_total",
+                              site=site, trigger=trigger).inc(
+                                  int(stall_us))
+
+    def instrument(self, site: str, key, fn):
+        """Wrap a jitted callable: the first call on each fresh
+        ``(site, key, arg-shapes)`` signature is timed to a blocking
+        result and recorded; warm calls pass straight through."""
+        tracker = self
+
+        def wrapped(*args, **kwargs):
+            if not tracker.enabled:
+                return fn(*args, **kwargs)
+            sig = (site, key, _shape_sig(args, kwargs))
+            if sig in tracker._seen:
+                return fn(*args, **kwargs)
+            tracker._seen.add(sig)
+            import jax
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            out = jax.block_until_ready(out)
+            tracker.record(site, key,
+                           (time.perf_counter() - t0) * 1e6)
+            return out
+
+        wrapped.__wrapped__ = fn
+        return wrapped
+
+    # -- aggregation --------------------------------------------------
+    def stats(self) -> dict:
+        """Per-trigger totals: ``{trigger: {events, stall_us}}``."""
+        out = {}
+        for ev in self.events:
+            d = out.setdefault(ev.trigger, {"events": 0, "stall_us": 0.0})
+            d["events"] += 1
+            d["stall_us"] += ev.stall_us
+        return out
+
+    def reset(self) -> None:
+        self.events.clear()
+        self._seen.clear()
+
+
+TRACKER = CompileTracker()
+
+
+def get_tracker() -> CompileTracker:
+    """The process-default tracker (what the core seams record to)."""
+    return TRACKER

@@ -76,13 +76,17 @@ class _SingleBackend:
         batch fits.  Dead nodes are compacted away by the drain, so one
         doubling usually suffices."""
         from ..core.migrate import migrate_state
+        from ..obs.compile import get_tracker
+        from ..obs.metrics import get_registry
         while not self.fits(ks):
             nb_old = self.n_buckets
             self.capacity *= 2
             self.n_buckets *= 2
-            self.state, _ = migrate_state(
-                self.state, nb_old, self.capacity, self.n_buckets)
-            self.migrations += 1
+            with get_tracker().reason("capacity_ladder"):
+                self.state, _ = migrate_state(
+                    self.state, nb_old, self.capacity, self.n_buckets)
+            self.migrations += 1   # shim; registry mirror:
+            get_registry().counter("dedup_migrations_total").inc()
 
     def update(self, ops: np.ndarray, ks: np.ndarray):
         pk = jnp.asarray(_pad_pow2(ks))
@@ -168,6 +172,7 @@ class _ShardedBackend:
         bounded drain rounds of
         :meth:`repro.core.sharded.ShardedDurableMap.migrate_to` until
         the batch fits each owner shard."""
+        from ..obs.metrics import get_registry
         while not self.fits(ks):
             cap = 2 * self.map.cap_local * self.map.n_shards
             nb = 2 * self.map.n_buckets
@@ -176,7 +181,8 @@ class _ShardedBackend:
             else:
                 self.map, _ = self.map.migrate_to(capacity=cap,
                                                   n_buckets=nb)
-            self.migrations += 1
+            self.migrations += 1   # shim; registry mirror:
+            get_registry().counter("dedup_migrations_total").inc()
 
     def update(self, ops: np.ndarray, ks: np.ndarray):
         return self.map.update(ops, ks, ks)

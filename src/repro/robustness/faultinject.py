@@ -23,9 +23,11 @@ eviction-mode and runs the scenario's recovery checks after each crash:
 equivalence** (an independent host-side replay of the durable bytes
 matches the recovered object).
 
-Four scenarios cover the four durable layers (the :data:`SCENARIOS`
+Five scenarios cover the durable layers (the :data:`SCENARIOS`
 registry): the serving :class:`~repro.serving.engine.RequestLog`
-(commit/evict/snapshot/truncate), the
+(commit/evict/snapshot/truncate), two such logs *live concurrently* on
+one dir (``log2`` — interleaved commits, recovery metrics checked
+against the durable bytes), the
 :class:`~repro.persistence.checkpoint.CheckpointManager` (save/gc), the
 :class:`~repro.core.migrate.MigratingMap` migration window and the
 :class:`~repro.core.rebalance.RebalancingShardedMap` rebalance window.
@@ -203,7 +205,7 @@ def _journal_invariants(root: Path, plan: CrashPlan, prefix: str):
 
 
 # --------------------------------------------------------------------- #
-# the four durable-layer scenarios                                       #
+# the durable-layer scenarios                                            #
 # --------------------------------------------------------------------- #
 class RequestLogScenario:
     """Serving request log under commit + evict + snapshot/truncate
@@ -308,6 +310,128 @@ class RequestLogScenario:
         rids = sorted(self.issued)
         want = np.asarray([r in committed for r in rids])
         assert np.array_equal(log.took_effect(rids), want)
+
+
+class ConcurrentLogScenario(RequestLogScenario):
+    """Two *live* RequestLog instances sharing one log dir, committing
+    interleaved batches (slot claims via O_EXCL keep them from ever
+    colliding) while instance A periodically snapshots/truncates.  Both
+    IOs ride the same whole-process crash plan.  On top of the
+    single-log invariants (inherited: disk-oracle equivalence, no acked
+    op lost, issued-payload atomicity, detectable recovery), the check
+    recovers *two* fresh instances — each on its own NVTrace metrics
+    registry — and asserts their observability is consistent with the
+    durable bytes: ``records_parsed`` (shim and registry counter alike)
+    equals the number of durable post-horizon record files the restart
+    actually had to replay, both recoveries agree with each other, and
+    their ``took_effect`` answers match rid-for-rid."""
+
+    layer = "log2"
+    N_ROUNDS = 4
+    BATCH = 2
+    RETAIN = 8
+    SNAP_EVERY = 2          # A snapshots after every 2 interleaved rounds
+
+    def run(self) -> None:
+        from ..obs.metrics import MetricsRegistry
+        from ..serving.engine import RequestLog
+        a = RequestLog(self.root, capacity=1024,
+                       registry=MetricsRegistry())
+        b = RequestLog(self.root, seed=1, capacity=1024,
+                       registry=MetricsRegistry())
+        self.plan.attach(a.io, b.io)
+        rid = 0
+        for rnd in range(self.N_ROUNDS):
+            for log in (a, b):
+                results = {rid + i: [rnd, i, rid + i]
+                           for i in range(self.BATCH)}
+                rid += self.BATCH
+                log.refresh()        # adopt the peer's commits first
+                evict = log.expired_rids(self.RETAIN)
+                self.issued.update(results)
+                self.issued_evict.update(evict)
+                log.commit(results, evict=evict)
+                self.acked.update(results)
+                self.acked_evict.update(evict)
+            if (rnd + 1) % self.SNAP_EVERY == 0:
+                a.snapshot()
+
+    def _replay_expect(self) -> int:
+        """How many record files a fresh restart must parse right now:
+        every ``log_*.json`` at/past the newest *valid* snapshot's
+        horizon (torn records cost exactly one parse attempt too)."""
+        horizon = 0
+        for name in sorted((p.name for p in self.root.glob("snap_*.json")),
+                           reverse=True):
+            try:
+                horizon = int(json.loads(
+                    (self.root / name).read_text())["horizon"])
+                break
+            except (json.JSONDecodeError, KeyError, ValueError):
+                continue
+        return sum(1 for p in self.root.glob("log_*.json")
+                   if (i := self._log_idx(p.name)) is not None
+                   and i >= horizon)
+
+    @staticmethod
+    def _log_idx(name: str) -> Optional[int]:
+        try:
+            return int(name[len("log_"):-len(".json")])
+        except ValueError:
+            return None
+
+    def _recover_one(self):
+        """One fresh recovered instance on a private registry, plus the
+        replay size its restart was facing (computed from the durable
+        bytes *before* construction — a restart trims torn/stale files,
+        so the expectation must be re-read per instance)."""
+        from ..obs.metrics import MetricsRegistry
+        from ..serving.engine import RequestLog
+        expect = self._replay_expect()
+        reg = MetricsRegistry()
+        log = RequestLog(self.root, capacity=1024, registry=reg)
+        return log, reg, expect
+
+    def check(self) -> None:
+        oracle = self._disk_oracle()         # before restart trims
+        log1, reg1, expect1 = self._recover_one()
+        committed = log1.committed()
+        assert committed == oracle, \
+            "recovered state diverges from the durable-bytes oracle"
+        for r, res in self.acked.items():
+            if r in committed:
+                assert committed[r] == res, f"payload of rid {r} changed"
+            else:
+                assert r in self.issued_evict, f"acked rid {r} lost"
+        for r, res in committed.items():
+            assert self.issued.get(r) == res, \
+                f"rid {r} recovered with a payload never issued"
+        # metrics/durable-bytes consistency, instance 1: the restart
+        # parsed exactly the durable post-horizon suffix, and the shim
+        # and the registry counter tell the same story
+        assert log1.records_parsed == expect1, \
+            (f"instance 1 parsed {log1.records_parsed} records, durable "
+             f"suffix holds {expect1}")
+        assert reg1.counter("serving_records_parsed_total").value \
+            == expect1, \
+            "registry counter diverges from the records_parsed shim"
+        # second fresh instance: expectation re-read after instance 1's
+        # restart trimmed torn/stale leftovers
+        log2, reg2, expect2 = self._recover_one()
+        assert log2.records_parsed == expect2, \
+            (f"instance 2 parsed {log2.records_parsed} records, durable "
+             f"suffix holds {expect2}")
+        assert reg2.counter("serving_records_parsed_total").value \
+            == expect2, \
+            "registry counter diverges from the records_parsed shim"
+        # both recoveries agree with each other and with the oracle
+        assert log2.committed() == committed, \
+            "two fresh recoveries disagree on the committed state"
+        rids = sorted(self.issued)
+        want = np.asarray([r in committed for r in rids])
+        assert np.array_equal(log1.took_effect(rids), want)
+        assert np.array_equal(log2.took_effect(rids), want), \
+            "took_effect answers diverge between concurrent recoveries"
 
 
 class CheckpointScenario:
@@ -495,6 +619,7 @@ class RebalanceScenario:
 
 SCENARIOS = {
     "log": RequestLogScenario,
+    "log2": ConcurrentLogScenario,
     "checkpoint": CheckpointScenario,
     "migrate": MigrateScenario,
     "rebalance": RebalanceScenario,

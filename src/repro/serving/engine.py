@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -23,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.metrics import get_registry
+from ..obs.spans import PersistListener, Tracer
 from ..persistence.index import MembershipIndex
 from ..persistence.manifest import StagedIO
 
@@ -50,12 +53,18 @@ class RequestLog:
     # authorizes the refresh() fast path
     _RACY_NS = 2_000_000_000
 
-    # grace interval granted to a concurrent committer before a torn
-    # placeholder seen at restart is trimmed (and between unlink retries)
+    # base grace interval granted to a concurrent committer before a torn
+    # placeholder seen at restart is trimmed; attempt k waits
+    # base * 2**k (capped at _TRIM_BACKOFF_MAX_S, jittered) so retries
+    # never run in lockstep with the writer they are yielding to
     _TRIM_BACKOFF_S = 0.01
+    _TRIM_BACKOFF_MAX_S = 0.08
+    _TRIM_RETRIES = 4
 
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
-                 shards: Optional[int] = None, rebalance: bool = False):
+                 shards: Optional[int] = None, rebalance: bool = False,
+                 registry=None, tracer: Optional[Tracer] = None,
+                 obs: bool = True):
         """``shards`` (optional) backs the dedup index with the
         bucket-range-sharded durable map
         (:class:`repro.core.sharded.ShardedDurableMap`) across that many
@@ -68,8 +77,24 @@ class RequestLog:
         (sharded only) additionally lets skewed rid streams re-split the
         shard boundaries under live traffic via
         :class:`repro.core.rebalance.RebalancingShardedMap`
-        (:attr:`dedup_rebalances` counts completions)."""
+        (:attr:`dedup_rebalances` counts completions).
+
+        ``registry``/``tracer`` plug the log into an explicit NVTrace
+        metrics registry and span tracer (default: the process-wide
+        ones); ``obs=False`` disables the span tracer and the
+        persistence-event listener — the zero-instrumentation baseline
+        the overhead bench compares against."""
         self.io = StagedIO(Path(root), seed=seed)
+        self.metrics = registry if registry is not None else get_registry()
+        self.tracer = tracer if tracer is not None else Tracer(
+            registry=self.metrics, enabled=obs)
+        if obs and self.io.faults is None:
+            # persistence-instruction counts per span ride the same
+            # `faults` hook surface CrashPlan uses; a crash plan attached
+            # later simply replaces the listener for that run
+            PersistListener(tracer=self.tracer,
+                            registry=self.metrics).attach(self.io)
+        self._rng = random.Random(0x5eed ^ seed)
         self._dedup = MembershipIndex(capacity, n_buckets=256,
                                       n_shards=shards,
                                       auto_rebalance=rebalance)
@@ -89,10 +114,10 @@ class RequestLog:
         self.refresh()
         # recovery: a restart is *usually* quiescent, but the torn
         # placeholder may be another live instance's in-flight commit —
-        # give the writer one backoff interval to land the payload (and
-        # retry a failed unlink once) instead of failing the restart.
-        # Torn files that appear *later* are always left alone (they
-        # heal via the refresh() signature check).
+        # grant the writer a bounded, jittered exponential backoff to
+        # land the payload instead of failing the restart.  Torn files
+        # that appear *later* are always left alone (they heal via the
+        # refresh() signature check).
         for name in list(self._torn):
             self._trim_torn(name)
         # finish any truncation a crash interrupted: records (and older
@@ -140,26 +165,38 @@ class RequestLog:
         # superseded older snapshots ride the restart trim
         self._stale.update(n for n in snaps if n != self._snap_name)
 
+    def _backoff(self, attempt: int) -> None:
+        """Bounded exponential backoff with jitter: attempt *k* sleeps
+        ``base * 2**k`` capped at ``_TRIM_BACKOFF_MAX_S``, scaled by a
+        uniform [0.5, 1.0) jitter so concurrent restarting instances
+        (and the writer being yielded to) never phase-lock."""
+        span = min(self._TRIM_BACKOFF_S * (1 << attempt),
+                   self._TRIM_BACKOFF_MAX_S)
+        time.sleep(span * (0.5 + self._rng.random() / 2))
+
     def _trim_torn(self, name: str) -> None:
         """Trim one torn record seen at restart, tolerating a concurrent
-        creation race: sleep one backoff interval and re-check first (a
-        mid-commit writer's record heals instead of being trimmed), then
-        retry a failed unlink once.  A still-failing unlink leaves the
-        file in the torn set — it heals or trims later — never failing
-        the restart itself."""
-        time.sleep(self._TRIM_BACKOFF_S)
-        self._try_fold(name)
-        if name not in self._torn:
-            return                  # healed: the writer finished
-        for retry in (False, True):
+        creation race.  Each of the ``_TRIM_RETRIES`` attempts grants a
+        growing, jittered grace interval (:meth:`_backoff`), re-checks
+        whether the writer finished (a mid-commit record *heals* instead
+        of being trimmed), then tries the unlink.  Exhausting the budget
+        leaves the file in the torn set — it heals or trims later —
+        never failing the restart itself.  Retries and heals are
+        counted on the registry (``serving_trim_retries_total`` /
+        ``serving_trim_heals_total``)."""
+        for attempt in range(self._TRIM_RETRIES):
+            self._backoff(attempt)
+            self._try_fold(name)
+            if name not in self._torn:
+                self.metrics.counter("serving_trim_heals_total").inc()
+                return              # healed: the writer finished
             try:
                 self.io.unlink(name)
             except OSError:
-                if retry:
-                    return          # keep it torn; skip, don't fail
-                time.sleep(self._TRIM_BACKOFF_S)
-                continue
+                self.metrics.counter("serving_trim_retries_total").inc()
+                continue            # grace grows; writer may still land
             del self._torn[name]
+            self.metrics.counter("serving_trims_total").inc()
             return
 
     def _unlink_quiet(self, name: str) -> None:
@@ -276,7 +313,8 @@ class RequestLog:
             return      # unchanged since the failed parse: still torn
         if idx is not None:
             self._n = max(self._n, idx + 1)
-        self.records_parsed += 1
+        self.records_parsed += 1   # per-instance shim; registry mirror:
+        self.metrics.counter("serving_records_parsed_total").inc()
         try:
             rec, evict = self._parse_record(p.read_text())
         except json.JSONDecodeError:
@@ -361,18 +399,24 @@ class RequestLog:
         overwritten.  An evicted rid leaves the exactly-once window: its
         result is dropped from the committed cache and a later request
         with that rid is served afresh."""
-        rel = self._claim_slot()
-        rec = {int(k): list(v) for k, v in results.items()}
-        evict = sorted({int(r) for r in evict})
-        if evict:
-            payload = json.dumps({"results": rec, "evict": evict})
-        else:
-            payload = json.dumps(rec)       # legacy-compatible record
-        self.io.write(rel, payload.encode())
-        self.io.flush(rel)
-        self.io.fence()
-        self._folded.add(rel)
-        self._apply_record(rec, evict)
+        with self.tracer.span("commit", n_results=len(results),
+                              n_evict=len(evict)):
+            rel = self._claim_slot()
+            rec = {int(k): list(v) for k, v in results.items()}
+            evict = sorted({int(r) for r in evict})
+            if evict:
+                payload = json.dumps({"results": rec, "evict": evict})
+            else:
+                payload = json.dumps(rec)   # legacy-compatible record
+            self.io.write(rel, payload.encode())
+            with self.tracer.span("flush_fence"):
+                self.io.flush(rel)
+                self.io.fence()
+            self._folded.add(rel)
+            self._apply_record(rec, evict)
+        self.metrics.counter("serving_commits_total").inc()
+        self.metrics.counter("serving_committed_rids_total").inc(len(rec))
+        self.metrics.counter("serving_evicted_rids_total").inc(len(evict))
 
     def expired_rids(self, retain: int) -> List[int]:
         """Rids past the newest ``retain`` committed ones, in commit
@@ -416,19 +460,23 @@ class RequestLog:
                 horizon = min(horizon, idx)
         if horizon <= self._snap_horizon:
             return None
-        payload = json.dumps(
-            {"format": 1, "horizon": horizon,
-             "results": {str(k): list(v)
-                         for k, v in self._results.items()}})
-        final = f"snap_{horizon:08d}.json"
-        self.io.write("snap.tmp", payload.encode())
-        self.io.flush("snap.tmp")
-        self.io.fence()
-        self.io.publish("snap.tmp", final)
-        old_snap, self._snap_name = self._snap_name, final
-        self._snap_horizon = horizon
-        if truncate:
-            self._truncate(horizon, old_snap)
+        with self.tracer.span("snapshot", horizon=horizon):
+            payload = json.dumps(
+                {"format": 1, "horizon": horizon,
+                 "results": {str(k): list(v)
+                             for k, v in self._results.items()}})
+            final = f"snap_{horizon:08d}.json"
+            self.io.write("snap.tmp", payload.encode())
+            with self.tracer.span("flush_fence"):
+                self.io.flush("snap.tmp")
+                self.io.fence()
+            with self.tracer.span("publish"):
+                self.io.publish("snap.tmp", final)
+            old_snap, self._snap_name = self._snap_name, final
+            self._snap_horizon = horizon
+            if truncate:
+                self._truncate(horizon, old_snap)
+        self.metrics.counter("serving_snapshots_total").inc()
         return final
 
     def _truncate(self, horizon: int, old_snap: Optional[str]) -> None:
@@ -483,7 +531,8 @@ class ServeEngine:
                  batch_size: int = 4, retain: Optional[int] = None,
                  log_shards: Optional[int] = None,
                  log_rebalance: bool = False,
-                 snapshot_every: Optional[int] = None):
+                 snapshot_every: Optional[int] = None,
+                 registry=None, obs: bool = True):
         """``retain`` bounds the exactly-once window: when set, each
         commit also evicts all but the newest ``retain`` committed rids
         from the durable dedup index — one mixed insert/delete round —
@@ -495,7 +544,11 @@ class ServeEngine:
         :class:`repro.core.rebalance.RebalancingShardedMap`).
         ``snapshot_every`` publishes a truncating
         :meth:`RequestLog.snapshot` after that many commits, keeping a
-        restart O(retention window) instead of O(served history)."""
+        restart O(retention window) instead of O(served history).
+        ``registry``/``obs`` select the NVTrace metrics registry and
+        toggle span/listener instrumentation (see
+        :class:`RequestLog`); per-request serve latency lands in the
+        ``serve_request_us`` histogram either way."""
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -504,7 +557,10 @@ class ServeEngine:
         self.snapshot_every = snapshot_every
         self._commits_since_snap = 0
         self.log = RequestLog(log_dir, shards=log_shards,
-                              rebalance=log_rebalance)
+                              rebalance=log_rebalance,
+                              registry=registry, obs=obs)
+        self.metrics = self.log.metrics
+        self.tracer = self.log.tracer
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)
@@ -541,20 +597,30 @@ class ServeEngine:
         instead would leak pad tokens into the shorter rows' attention.
         Already-committed rids are skipped (exactly-once) and answered
         from the log."""
-        self.log.refresh()    # pick up commits from other engine instances
-        rids = sorted(requests)
-        todo = [rid for rid, done in zip(rids, self.log.is_committed(rids))
-                if not done]
-        groups: Dict[int, List[int]] = {}
-        for rid in todo:
-            groups.setdefault(int(requests[rid].shape[0]), []).append(rid)
+        with self.tracer.span("route", n_requests=len(requests)):
+            self.log.refresh()  # pick up other engine instances' commits
+            rids = sorted(requests)
+            todo = [rid for rid, done
+                    in zip(rids, self.log.is_committed(rids)) if not done]
+            groups: Dict[int, List[int]] = {}
+            for rid in todo:
+                groups.setdefault(int(requests[rid].shape[0]), []).append(rid)
+        self.metrics.counter("serving_requests_total").inc(len(rids))
+        self.metrics.counter("serving_dedup_hits_total").inc(
+            len(rids) - len(todo))
+        lat_hist = self.metrics.histogram("serve_request_us",
+                                          lo=1.0, hi=1e8, growth=1.25)
         crashed = False
         batches = 0
         for length in sorted(groups):
             for i in range(0, len(groups[length]), self.batch):
+                t_batch = time.perf_counter_ns()
                 batch_rids = groups[length][i:i + self.batch]
-                prompts = _stack_batch([requests[r] for r in batch_rids])
-                gen = self._greedy_batch(prompts, n_new)  # the traversal
+                with self.tracer.span("plan", n=len(batch_rids),
+                                      prompt_len=length):
+                    prompts = _stack_batch(
+                        [requests[r] for r in batch_rids])
+                    gen = self._greedy_batch(prompts, n_new)  # traversal
                 # never evict a rid this call is serving: its result was
                 # just paid for and belongs in this call's return value
                 expired = ([r for r in self.log.expired_rids(self.retain)
@@ -564,6 +630,12 @@ class ServeEngine:
                                  for j, r in enumerate(batch_rids)},
                                 evict=expired)
                 self._commits_since_snap += 1
+                # every request in a (synchronous) batch experiences the
+                # batch's wall time — that is its serve latency
+                dur_us = (time.perf_counter_ns() - t_batch) / 1e3
+                for _ in batch_rids:
+                    lat_hist.record(dur_us)
+                self.metrics.counter("serving_batches_total").inc()
                 if self.snapshot_every is not None and \
                         self._commits_since_snap >= self.snapshot_every:
                     self.log.snapshot()

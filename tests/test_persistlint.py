@@ -29,7 +29,7 @@ from repro.robustness import KINDS
 from repro.robustness import faultinject
 
 REPO = Path(__file__).resolve().parents[1]
-LAYERS = ("log", "checkpoint", "migrate", "rebalance")
+LAYERS = ("log", "log2", "checkpoint", "migrate", "rebalance")
 
 
 def E(i, kind, target="", src=None, in_traverse=False):
@@ -56,7 +56,7 @@ def test_unknown_kind_fails_loudly_everywhere():
 
 
 # --------------------------------------------------------------------- #
-# clean runs: the repo and all four layers satisfy the discipline        #
+# clean runs: the repo and every layer satisfy the discipline            #
 # --------------------------------------------------------------------- #
 def test_static_repo_is_clean_with_exactly_the_known_waivers():
     rep = run_static()

@@ -43,6 +43,7 @@ DOCTEST_MODULES = [
     "repro.robustness.faultinject",
     "repro.analysis.persistlint",
     "repro.analysis.checker",
+    "repro.obs.metrics",
 ]
 MIN_DOCTESTS = 6
 

@@ -1,0 +1,192 @@
+"""LoadScope bench: open/closed-loop load against the serving stack.
+
+    PYTHONPATH=src python -m benchmarks.loadtest [--quick]
+        [--out BENCH_nvt.json] [--flight LOADTEST_flight.json]
+
+Runs the deterministic load harness (`repro.obs.loadgen`) at two zipf
+skews plus a uniform mix, in both open and closed loop, and merges a
+``serving_load`` section into BENCH_nvt.json:
+
+* per point: rolling p50/p99 + ops/s series (windowed telemetry), the
+  lifetime quantiles, sustained ops/s, the event timeline and the
+  p99-excursion → annotated-event attribution;
+* a crash point: torn-payload crash mid-commit, flight-recorder dump
+  (written to ``--flight``) and the per-phase restart breakdown;
+* a sharded point (``log_shards=2``) when >= 2 devices are visible;
+* in full (non ``--quick``) mode additionally a tiny-model
+  ``ServeEngine`` point (update = traversal + commit, read = dedup
+  hit).
+
+The section merges like every other bench section: partial runs update
+only ``serving_load``.  CI's loadtest lane asserts on the result (see
+docs/benchmarks.md) and ``tools/bench_history.py`` tracks the scalars
+across runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+
+def _merge(out_json: str, section: dict) -> None:
+    from benchmarks.run import _load_report
+    report = _load_report(out_json)
+    report["serving_load"] = section
+    Path(out_json).write_text(json.dumps(report, indent=1,
+                                         sort_keys=True))
+
+
+def _slim(rep: dict) -> dict:
+    """The stored form of one point: full series/timeline/excursions,
+    minus the per-window throughput duplicate (count/ops_s already ride
+    the latency series)."""
+    rep = dict(rep)
+    rep.pop("throughput", None)
+    return rep
+
+
+def _point(key: str, root: Path, spec, flight_path=None, engine=None,
+           rows=None):
+    from repro.obs.loadgen import LoadHarness
+    t0 = time.time()
+    rep = LoadHarness(str(root / key), spec,
+                      flight_path=flight_path, engine=engine).run()
+    print(f"# loadtest {key}: p50={rep['p50_us']:.0f}us "
+          f"p99={rep['p99_us']:.0f}us "
+          f"sustained={rep['sustained_ops_s']:.0f} ops/s "
+          f"excursions={rep['n_excursions']} "
+          f"attributed={rep['n_attributed_excursions']} "
+          f"({time.time() - t0:.1f}s)", file=sys.stderr)
+    if rows is not None:
+        rows.append((f"loadtest_{key}_p99", rep["p99_us"],
+                     f"ops_s={rep['sustained_ops_s']:.0f}"))
+    return _slim(rep)
+
+
+def bench_serving_load(rows=None, out_json: str = "BENCH_nvt.json",
+                       quick: bool = False,
+                       flight_path: str = "LOADTEST_flight.json") -> dict:
+    import jax
+
+    from repro.obs.loadgen import LoadSpec
+
+    n_closed = 160 if quick else 400
+    n_open = 120 if quick else 300
+    # closed-loop snapshot cadence tuned so most windows hold only
+    # plain commits and the periodic truncating snapshot towers over
+    # them — the excursion the timeline must attribute
+    closed_kw = dict(n_ops=n_closed, update_frac=0.6, batch=4,
+                     window_us=10_000.0, retain=128, snapshot_every=20,
+                     warmup_ops=6)
+    open_kw = dict(n_ops=n_open, mode="open", rate_ops_s=400.0,
+                   update_frac=0.6, batch=4, window_us=20_000.0,
+                   retain=128, snapshot_every=20, warmup_ops=6)
+
+    points = {}
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        for skew in (1.1, 1.5):
+            points[f"closed_zipf{skew}"] = _point(
+                f"closed_zipf{skew}", root,
+                LoadSpec(seed=11, dist="zipf", skew=skew, **closed_kw),
+                rows=rows)
+            points[f"open_zipf{skew}"] = _point(
+                f"open_zipf{skew}", root,
+                LoadSpec(seed=13, dist="zipf", skew=skew, **open_kw),
+                rows=rows)
+        points["closed_uniform"] = _point(
+            "closed_uniform", root,
+            LoadSpec(seed=17, dist="uniform", **closed_kw), rows=rows)
+
+        # crash point: torn-payload crash mid-commit, flight dump +
+        # per-phase restart breakdown on the reload
+        points["closed_crash"] = _point(
+            "closed_crash", root,
+            LoadSpec(seed=19, dist="zipf", skew=1.3,
+                     crash_at_op=n_closed // 2, crash_evict="torn",
+                     **closed_kw),
+            flight_path=flight_path, rows=rows)
+
+        sharded: dict
+        if jax.device_count() >= 2:
+            points["closed_zipf1.3_shards2"] = _point(
+                "closed_zipf1.3_shards2", root,
+                LoadSpec(seed=23, dist="zipf", skew=1.3, shards=2,
+                         rebalance=True, **closed_kw),
+                rows=rows)
+            sharded = {"devices": jax.device_count(), "ran": True}
+        else:
+            sharded = {"devices": jax.device_count(), "ran": False,
+                       "note": "log_shards point needs >= 2 devices"}
+
+        if not quick:
+            points["engine_closed_zipf1.3"] = _engine_point(root, rows)
+
+    n_exc = sum(p["n_excursions"] for p in points.values())
+    n_att = sum(p["n_attributed_excursions"] for p in points.values())
+    section = {
+        "quick": quick,
+        "flight_dump": flight_path,
+        "points": points,
+        "sharded": sharded,
+        "attribution": {
+            "n_excursions_total": n_exc,
+            "n_attributed_total": n_att,
+            # the acceptance witness: at least one p99 excursion is
+            # explained by a concrete annotated event
+            "any_attributed": n_att >= 1,
+        },
+    }
+    _merge(out_json, section)
+    return section
+
+
+def _engine_point(root: Path, rows):
+    """Full-stack point: the same spec driven through a tiny-model
+    ServeEngine (updates pay prefill/decode + commit; reads are dedup
+    hits answered from the log)."""
+    import jax
+
+    from repro.configs.registry import get_arch, tiny
+    from repro.models.model import build_model
+    from repro.obs.loadgen import LoadSpec
+    from repro.serving.engine import ServeEngine
+
+    cfg = tiny(get_arch("qwen2-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = LoadSpec(n_ops=60, seed=29, dist="zipf", skew=1.3,
+                    update_frac=0.5, batch=2, window_us=100_000.0,
+                    retain=64, snapshot_every=None, warmup_ops=3)
+
+    def factory(registry, timeline):
+        return ServeEngine(model, params, max_len=24,
+                           log_dir=str(root / "engine"), batch_size=2,
+                           retain=64, snapshot_every=10,
+                           registry=registry, timeline=timeline)
+
+    return _point("engine_closed_zipf1.3", root, spec, engine=factory,
+                  rows=rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (shorter streams, same shape)")
+    ap.add_argument("--out", default="BENCH_nvt.json")
+    ap.add_argument("--flight", default="LOADTEST_flight.json")
+    args = ap.parse_args()
+    rows = []
+    bench_serving_load(rows, out_json=args.out, quick=args.quick,
+                       flight_path=args.flight)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,9 @@
 """NVTrace: runtime observability for the serving + durable-map stack.
 
-Three pieces, one theme — make the paper's phase asymmetry (traversal
-persists nothing; every fence lands at the destination) *measurable on
-a live process* instead of only provable by crash sweeps and lint:
+Make the paper's phase asymmetry (traversal persists nothing; every
+fence lands at the destination) *measurable on a live process* instead
+of only provable by crash sweeps and lint — and, since LoadScope,
+measurable *over time under load*:
 
 * :mod:`repro.obs.metrics` — counters / gauges / log-bucket histograms
   in a mergeable, snapshottable registry.
@@ -10,14 +11,28 @@ a live process* instead of only provable by crash sweeps and lint:
   flush/fence/publish counts ride the existing ``faults`` hook surface.
 * :mod:`repro.obs.compile` — first-call jit/shard_map stall tracking
   with trigger attribution (re-split width change, capacity ladder).
+* :mod:`repro.obs.windows` — fixed-epoch windowed histograms/counters:
+  the rolling p50/p99/throughput series.
+* :mod:`repro.obs.timeline` — timestamped event annotations aligned
+  with the latency series (excursion attribution) and a bounded
+  flight recorder dumped on SLO breach or crash.
+* :mod:`repro.obs.loadgen` — deterministic open/closed-loop workload
+  driver that ties all of the above together against
+  ``RequestLog``/``ServeEngine``.
 """
 from .compile import CompileEvent, CompileTracker, get_tracker
+from .loadgen import LoadHarness, LoadSpec, Schedule, make_schedule
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry)
 from .spans import FaultsTee, PersistListener, Span, Tracer
+from .timeline import EventTimeline, FlightRecorder, attribute_excursions
+from .windows import WindowedCounter, WindowedHistogram
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
     "Span", "Tracer", "PersistListener", "FaultsTee",
     "CompileEvent", "CompileTracker", "get_tracker",
+    "WindowedHistogram", "WindowedCounter",
+    "EventTimeline", "FlightRecorder", "attribute_excursions",
+    "LoadSpec", "Schedule", "make_schedule", "LoadHarness",
 ]

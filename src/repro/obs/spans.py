@@ -51,6 +51,8 @@ class Span:
         tr._stack.pop()
         self.dur_us = (time.perf_counter_ns() - self.t0_ns) / 1e3
         tr._ring.append(self)        # record dicts are built lazily
+        if tr.on_span is not None:   # flight-recorder feed (rare)
+            tr.on_span(self.to_record(tr.epoch_ns))
         cached = tr._hists.get(self.phase)
         if cached is None or cached[0] != tr.registry.gen:
             cached = (tr.registry.gen, tr.registry.histogram(
@@ -116,6 +118,10 @@ class Tracer:
                                 # span exit, invalidated by reset()
         self.totals = {}
         self.span_counts = {}   # per-kind sums over *finished* spans
+        self.on_span = None     # optional callback(record) on span
+                                # close — the FlightRecorder feed
+                                # (`repro.obs.timeline`); one attr
+                                # check per exit when unset
 
     # -- spans --------------------------------------------------------
     @property

@@ -30,6 +30,19 @@ import numpy as np
 from ..core.pmem import evicted_mask
 
 
+def _torn_payload(data: bytes, rng) -> bytes:
+    """One torn image of ``data``: a strict prefix, tail either gone
+    (short write) or bitwise-inverted in place (garbled sectors).  Never
+    equal to ``data`` for non-empty payloads — the cut is strictly
+    inside — so a "torn" eviction is guaranteed to actually tear."""
+    if len(data) == 0:
+        return data
+    cut = int(rng.integers(0, len(data)))
+    if int(rng.integers(0, 2)):
+        return data[:cut] + bytes(255 - b for b in data[cut:])
+    return data[:cut]
+
+
 @dataclasses.dataclass
 class IOCounters:
     writes: int = 0
@@ -114,14 +127,27 @@ class StagedIO:
         (:func:`repro.core.pmem.evicted_mask`) applied over staged
         files in sorted order, so DRAM-line and file-staging crash
         models agree — and an unknown mode raises instead of silently
-        evicting at random."""
+        evicting at random.
+
+        ``evict="torn"`` is the partial-write adversary: a random
+        subset reaches disk **torn** — a strict prefix of the payload,
+        half the time with the remaining tail bitwise-garbled in place
+        instead of truncated — modeling a kill mid-``write(2)``.
+        Recovery must treat such a file exactly like a torn record.
+        (File-granularity only: the 8-byte-atomic ``PMem`` model keeps
+        rejecting the mode, partial cache lines do not exist there.)"""
         staged = sorted(self._staged)
-        mask = evicted_mask(len(staged), evict, self._rng, p_evict)
+        torn = evict == "torn"
+        mask = evicted_mask(len(staged), "random" if torn else evict,
+                            self._rng, p_evict)
         for rel, hit in zip(staged, mask):
             if hit:
+                data = self._staged[rel]
+                if torn:
+                    data = _torn_payload(data, self._rng)
                 path = self.root / rel
                 path.parent.mkdir(parents=True, exist_ok=True)
-                path.write_bytes(self._staged[rel])
+                path.write_bytes(data)
         self._staged.clear()
         self._flushed.clear()
 

@@ -220,9 +220,15 @@ class RequestLogScenario:
     RETAIN = 6
     SNAP_EVERY = 2          # snapshot()+truncate after every 2 commits
 
-    def __init__(self, root, plan: CrashPlan):
+    def __init__(self, root, plan: CrashPlan,
+                 shards: Optional[int] = None):
+        """``shards`` runs the identical schedule with the dedup index
+        on the bucket-range-sharded durable-map backend (needs that
+        many devices — the CI faultinject lane forces 2 host devices);
+        the invariants are shard-count-independent."""
         self.root = Path(root)
         self.plan = plan
+        self.shards = shards
         self.issued: Dict[int, list] = {}   # every commit attempted
         self.issued_evict: set = set()
         self.acked: Dict[int, list] = {}    # commit() returned
@@ -230,7 +236,7 @@ class RequestLogScenario:
 
     def run(self) -> None:
         from ..serving.engine import RequestLog
-        log = RequestLog(self.root, capacity=1024)
+        log = RequestLog(self.root, capacity=1024, shards=self.shards)
         self.plan.attach(log.io)
         rid = 0
         for b in range(self.N_BATCHES):
@@ -271,8 +277,8 @@ class RequestLogScenario:
                 continue
             try:
                 data = json.loads(p.read_text())
-            except json.JSONDecodeError:
-                continue                        # torn record: trimmed
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                continue    # torn record (truncated or garbled): trimmed
             if "results" in data and set(data) <= {"results", "evict"}:
                 rec = {int(k): list(v)
                        for k, v in data["results"].items()}
@@ -288,7 +294,7 @@ class RequestLogScenario:
     def check(self) -> None:
         from ..serving.engine import RequestLog
         oracle = self._disk_oracle()         # before restart trims
-        log = RequestLog(self.root, capacity=1024)
+        log = RequestLog(self.root, capacity=1024, shards=self.shards)
         committed = log.committed()
         # oracle equivalence: recovery == independent durable replay
         assert committed == oracle, \
@@ -335,10 +341,10 @@ class ConcurrentLogScenario(RequestLogScenario):
     def run(self) -> None:
         from ..obs.metrics import MetricsRegistry
         from ..serving.engine import RequestLog
-        a = RequestLog(self.root, capacity=1024,
+        a = RequestLog(self.root, capacity=1024, shards=self.shards,
                        registry=MetricsRegistry())
         b = RequestLog(self.root, seed=1, capacity=1024,
-                       registry=MetricsRegistry())
+                       shards=self.shards, registry=MetricsRegistry())
         self.plan.attach(a.io, b.io)
         rid = 0
         for rnd in range(self.N_ROUNDS):
@@ -389,7 +395,8 @@ class ConcurrentLogScenario(RequestLogScenario):
         from ..serving.engine import RequestLog
         expect = self._replay_expect()
         reg = MetricsRegistry()
-        log = RequestLog(self.root, capacity=1024, registry=reg)
+        log = RequestLog(self.root, capacity=1024, shards=self.shards,
+                         registry=reg)
         return log, reg, expect
 
     def check(self) -> None:
@@ -671,9 +678,13 @@ def sweep(scenario_cls, *, budget: Optional[int] = None,
     """Crash-at-every-site sweep of one scenario: enumerate, then for
     each (site × eviction mode) crash there, recover, and run the
     scenario's invariant checks.  ``budget`` bounds the number of sites
-    tested (evenly spaced, first and last always included).  Returns a
-    JSON-able report; ``report["failures"]`` is empty iff every
-    recovery held every invariant."""
+    tested (evenly spaced, first and last always included).
+    ``evict_modes`` may include ``"torn"`` — the partial-write
+    adversary of :meth:`repro.persistence.manifest.StagedIO.crash`,
+    which lands *torn* payloads (truncated or garbled) instead of whole
+    files; every scenario's recovery must treat those exactly like torn
+    records.  Returns a JSON-able report; ``report["failures"]`` is
+    empty iff every recovery held every invariant."""
     sites = enumerate_sites(scenario_cls, scenario_kw)
     idxs = _budget_indices(len(sites), budget)
     failures = []

@@ -64,7 +64,7 @@ class RequestLog:
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
                  shards: Optional[int] = None, rebalance: bool = False,
                  registry=None, tracer: Optional[Tracer] = None,
-                 obs: bool = True):
+                 timeline=None, obs: bool = True):
         """``shards`` (optional) backs the dedup index with the
         bucket-range-sharded durable map
         (:class:`repro.core.sharded.ShardedDurableMap`) across that many
@@ -81,7 +81,11 @@ class RequestLog:
 
         ``registry``/``tracer`` plug the log into an explicit NVTrace
         metrics registry and span tracer (default: the process-wide
-        ones); ``obs=False`` disables the span tracer and the
+        ones); ``timeline`` (an :class:`repro.obs.timeline.
+        EventTimeline`) additionally gets snapshot/truncate,
+        dedup-migration/rebalance and open/recovery annotations so a
+        latency excursion in a windowed series is attributable to its
+        cause; ``obs=False`` disables the span tracer and the
         persistence-event listener — the zero-instrumentation baseline
         the overhead bench compares against."""
         self.io = StagedIO(Path(root), seed=seed)
@@ -110,8 +114,12 @@ class RequestLog:
                                    # mid-truncation): trimmed at restart
         self.records_parsed = 0    # log records read+parsed by this
                                    # instance (restart-replay observability)
+        self.timeline = timeline
+        t0 = time.perf_counter_ns()
         self._load_snapshot()
+        t1 = time.perf_counter_ns()
         self.refresh()
+        t2 = time.perf_counter_ns()
         # recovery: a restart is *usually* quiescent, but the torn
         # placeholder may be another live instance's in-flight commit —
         # grant the writer a bounded, jittered exponential backoff to
@@ -125,6 +133,26 @@ class RequestLog:
         for name in sorted(self._stale):
             self._unlink_quiet(name)
         self._stale.clear()
+        t3 = time.perf_counter_ns()
+        # per-phase restart breakdown — the flight recorder dumps this
+        # on a post-crash reload so recovery cost is explainable, not
+        # just a total (see docs/observability.md)
+        self.restart_timing = {
+            "load_snapshot_us": (t1 - t0) / 1e3,
+            "replay_us": (t2 - t1) / 1e3,
+            "trim_us": (t3 - t2) / 1e3,
+            "total_us": (t3 - t0) / 1e3,
+            "records_parsed": self.records_parsed,
+            "snapshot_loaded": self._snap_name is not None,
+        }
+        for ph in ("load_snapshot", "replay", "trim"):
+            self.metrics.histogram(
+                "restart_phase_us", lo=1.0, hi=1e8, growth=1.25,
+                phase=ph).record(self.restart_timing[ph + "_us"])
+        if timeline is not None:
+            timeline.annotate("log_open",
+                              total_us=self.restart_timing["total_us"],
+                              records_parsed=self.records_parsed)
 
     @staticmethod
     def _log_index(name: str) -> Optional[int]:
@@ -317,8 +345,10 @@ class RequestLog:
         self.metrics.counter("serving_records_parsed_total").inc()
         try:
             rec, evict = self._parse_record(p.read_text())
-        except json.JSONDecodeError:
-            # torn log record: trimmed by recovery semantics
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            # torn log record — truncated payloads fail to parse,
+            # garbled ones may not even decode as UTF-8; both are the
+            # same torn-record state, trimmed by recovery semantics
             self._torn[name] = sig
             return
         self._torn.pop(name, None)
@@ -413,7 +443,20 @@ class RequestLog:
                 self.io.flush(rel)
                 self.io.fence()
             self._folded.add(rel)
+            m0, r0 = self._dedup.migrations, self._dedup.rebalances
             self._apply_record(rec, evict)
+            if self.timeline is not None:
+                # annotate live-traffic dedup growth/re-splits only (a
+                # restart replay folds records through _apply_record
+                # directly and stays silent)
+                if self._dedup.migrations > m0:
+                    self.timeline.annotate(
+                        "dedup_migration",
+                        rounds=self._dedup.migrations - m0)
+                if self._dedup.rebalances > r0:
+                    self.timeline.annotate(
+                        "dedup_rebalance",
+                        rounds=self._dedup.rebalances - r0)
         self.metrics.counter("serving_commits_total").inc()
         self.metrics.counter("serving_committed_rids_total").inc(len(rec))
         self.metrics.counter("serving_evicted_rids_total").inc(len(evict))
@@ -474,25 +517,37 @@ class RequestLog:
                 self.io.publish("snap.tmp", final)
             old_snap, self._snap_name = self._snap_name, final
             self._snap_horizon = horizon
+            if self.timeline is not None:
+                self.timeline.annotate("snapshot", horizon=horizon,
+                                       n_results=len(self._results))
             if truncate:
-                self._truncate(horizon, old_snap)
+                n_trimmed = self._truncate(horizon, old_snap)
+                if self.timeline is not None:
+                    self.timeline.annotate("truncate", horizon=horizon,
+                                           n_trimmed=n_trimmed)
         self.metrics.counter("serving_snapshots_total").inc()
         return final
 
-    def _truncate(self, horizon: int, old_snap: Optional[str]) -> None:
+    def _truncate(self, horizon: int, old_snap: Optional[str]) -> int:
         """Unlink everything the just-published snapshot supersedes.
         Crash-safe by construction: every leftover is either below the
         published horizon (restart re-collects and trims it) or an older
-        snapshot shadowed by the newer one."""
+        snapshot shadowed by the newer one.  Returns the number of
+        files trimmed (timeline observability)."""
+        n = 0
         for name in sorted(self._folded):
             idx = self._log_index(name)
             if idx is not None and idx < horizon:
                 self._unlink_quiet(name)
+                n += 1
         for name in sorted(self._stale):
             self._unlink_quiet(name)
+            n += 1
         self._stale.clear()
         if old_snap is not None:
             self._unlink_quiet(old_snap)
+            n += 1
+        return n
 
     def took_effect(self, rids: Sequence[int]) -> np.ndarray:
         """Per-op detectable recovery ("Tracking in Order to Recover"):
@@ -532,7 +587,7 @@ class ServeEngine:
                  log_shards: Optional[int] = None,
                  log_rebalance: bool = False,
                  snapshot_every: Optional[int] = None,
-                 registry=None, obs: bool = True):
+                 registry=None, timeline=None, obs: bool = True):
         """``retain`` bounds the exactly-once window: when set, each
         commit also evicts all but the newest ``retain`` committed rids
         from the durable dedup index — one mixed insert/delete round —
@@ -545,8 +600,9 @@ class ServeEngine:
         ``snapshot_every`` publishes a truncating
         :meth:`RequestLog.snapshot` after that many commits, keeping a
         restart O(retention window) instead of O(served history).
-        ``registry``/``obs`` select the NVTrace metrics registry and
-        toggle span/listener instrumentation (see
+        ``registry``/``timeline``/``obs`` select the NVTrace metrics
+        registry, the event timeline for snapshot/truncate/growth
+        annotations, and toggle span/listener instrumentation (see
         :class:`RequestLog`); per-request serve latency lands in the
         ``serve_request_us`` histogram either way."""
         self.model = model
@@ -558,9 +614,11 @@ class ServeEngine:
         self._commits_since_snap = 0
         self.log = RequestLog(log_dir, shards=log_shards,
                               rebalance=log_rebalance,
-                              registry=registry, obs=obs)
+                              registry=registry, timeline=timeline,
+                              obs=obs)
         self.metrics = self.log.metrics
         self.tracer = self.log.tracer
+        self.timeline = self.log.timeline
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)

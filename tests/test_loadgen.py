@@ -1,0 +1,473 @@
+"""LoadScope: windowed telemetry, event timeline, flight recorder,
+deterministic load schedules, and the bench-history regression gate.
+
+The windowed-histogram tests pin the properties the load harness leans
+on: half-open epoch membership as a pure function of ``t_us``, the
+windowed-vs-lifetime consistency invariant (``merged() == lifetime``
+when nothing was dropped), and snapshot-merge associativity /
+commutativity — including across real shard *subprocesses*, since
+that is how a sharded load run's telemetry is reassembled.  The
+schedule tests pin determinism (same seed ⇒ bit-identical schedule);
+the harness tests run a real closed loop against a ``RequestLog`` in a
+tmp dir, including the injected torn-payload crash with its
+flight-recorder dump and per-phase restart breakdown.  The
+bench-history tests are the acceptance witness for the regression
+gate: a seeded synthetic regression must be detected, an equally large
+improvement must not fail.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.obs.loadgen import (LoadHarness, LoadSpec, Schedule,
+                               make_schedule)
+from repro.obs.timeline import (EventTimeline, FlightRecorder,
+                                attribute_excursions)
+from repro.obs.windows import WindowedCounter, WindowedHistogram
+
+
+# --------------------------------------------------------------------- #
+# windowed telemetry                                                     #
+# --------------------------------------------------------------------- #
+def test_window_boundary_epoch_semantics():
+    """Epoch e covers [e*window_us, (e+1)*window_us) — a sample at
+    exactly the boundary opens the *next* window."""
+    w = WindowedHistogram(window_us=100.0, lo=1.0, hi=1e4, growth=2.0)
+    assert w.epoch_of(0.0) == 0
+    assert w.epoch_of(99.999) == 0
+    assert w.epoch_of(100.0) == 1
+    assert w.epoch_of(250.0) == 2
+    w.record(5.0, t_us=99.999)
+    w.record(7.0, t_us=100.0)
+    assert w.window(0).count == 1 and w.window(1).count == 1
+    rows = w.series()
+    assert [r["epoch"] for r in rows] == [0, 1]
+    assert rows[0]["t_end_us"] == rows[1]["t_start_us"] == 100.0
+
+
+def test_windowed_vs_lifetime_quantile_consistency():
+    """With nothing dropped, the merge of all windows IS the lifetime
+    aggregate — same counts, sums and quantiles at every q."""
+    w = WindowedHistogram(window_us=50.0, lo=1.0, hi=1e5, growth=1.25)
+    rng = np.random.default_rng(3)
+    for t, v in zip(rng.uniform(0, 1000, 500),
+                    rng.lognormal(3, 1, 500)):
+        w.record(float(v), t_us=float(t))
+    m = w.merged()
+    assert w.dropped_epochs == 0
+    assert m.count == w.lifetime.count
+    assert m.sum == pytest.approx(w.lifetime.sum)   # summation order
+    for q in (0.01, 0.5, 0.9, 0.99, 1.0):
+        assert m.quantile(q) == w.lifetime.quantile(q)
+
+
+def test_max_windows_bound_and_dropped_epochs():
+    w = WindowedHistogram(window_us=10.0, max_windows=4)
+    for e in range(9):
+        w.record(2.0, t_us=e * 10.0)
+    assert len(w.epochs) == 4
+    assert w.dropped_epochs == 5
+    assert sorted(w.epochs) == [5, 6, 7, 8]      # oldest dropped first
+    assert w.lifetime.count == 9                 # lifetime never drops
+
+
+def test_snapshot_merge_associative_commutative_roundtrip():
+    """Per-epoch elementwise addition: any merge order and grouping of
+    shard snapshots yields the same series — and snapshots survive a
+    JSON round trip."""
+    def mk(seed):
+        w = WindowedHistogram(window_us=25.0, lo=1.0, hi=1e4,
+                              growth=1.5)
+        rng = np.random.default_rng(seed)
+        for t, v in zip(rng.uniform(0, 200, 60),
+                        rng.uniform(1, 5e3, 60)):
+            w.record(float(v), t_us=float(t))
+        return w
+
+    a, b, c = mk(1), mk(2), mk(3)
+    snaps = [json.loads(json.dumps(x.snapshot())) for x in (a, b, c)]
+
+    def fold(order):
+        out = WindowedHistogram(window_us=25.0, lo=1.0, hi=1e4,
+                                growth=1.5)
+        for i in order:
+            out.merge_snapshot(snaps[i])
+        return out
+
+    ref = fold([0, 1, 2])
+    for order in ([2, 1, 0], [1, 0, 2], [2, 0, 1]):
+        got = fold(order)
+        assert [r["count"] for r in got.series()] \
+            == [r["count"] for r in ref.series()]
+        assert got.lifetime.count == ref.lifetime.count
+        for q in (0.5, 0.99):
+            assert got.merged().quantile(q) == ref.merged().quantile(q)
+    assert ref.lifetime.count == 180
+
+
+def test_merge_rejects_layout_mismatch():
+    w = WindowedHistogram(window_us=100.0, lo=1.0, hi=1e4, growth=2.0)
+    other = WindowedHistogram(window_us=50.0, lo=1.0, hi=1e4,
+                              growth=2.0)
+    with pytest.raises(ValueError, match="window/bucket layouts"):
+        w.merge_snapshot(other.snapshot())
+    c = WindowedCounter(window_us=100.0)
+    with pytest.raises(ValueError, match="window_us"):
+        c.merge_snapshot(WindowedCounter(window_us=7.0).snapshot())
+
+
+_CHILD = """
+import json, sys
+import numpy as np
+from repro.obs.windows import WindowedHistogram
+seed = int(sys.argv[1])
+w = WindowedHistogram(window_us=40.0, lo=1.0, hi=1e4, growth=1.5)
+rng = np.random.default_rng(seed)
+for t, v in zip(rng.uniform(0, 400, 80), rng.uniform(1, 9e3, 80)):
+    w.record(float(v), t_us=float(t))
+print(json.dumps(w.snapshot()))
+"""
+
+
+def test_snapshot_merge_across_shard_subprocesses():
+    """Two real subprocesses each record their shard's samples and emit
+    a snapshot on stdout; the parent merges them (both orders) and the
+    result equals recording everything in one process."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    snaps = []
+    for seed in (101, 202):
+        out = subprocess.run([sys.executable, "-c", _CHILD, str(seed)],
+                             capture_output=True, text=True, env=env,
+                             check=True)
+        snaps.append(json.loads(out.stdout))
+
+    local = WindowedHistogram(window_us=40.0, lo=1.0, hi=1e4,
+                              growth=1.5)
+    for seed in (101, 202):
+        rng = np.random.default_rng(seed)
+        for t, v in zip(rng.uniform(0, 400, 80),
+                        rng.uniform(1, 9e3, 80)):
+            local.record(float(v), t_us=float(t))
+
+    for order in ((0, 1), (1, 0)):
+        m = WindowedHistogram(window_us=40.0, lo=1.0, hi=1e4,
+                              growth=1.5)
+        for i in order:
+            m.merge_snapshot(snaps[i])
+        assert [r["count"] for r in m.series()] \
+            == [r["count"] for r in local.series()]
+        assert m.lifetime.count == local.lifetime.count == 160
+        assert m.merged().quantile(0.99) \
+            == local.merged().quantile(0.99)
+
+
+def test_windowed_counter_epochs_and_merge():
+    c = WindowedCounter(window_us=1000.0, max_windows=3)
+    c.inc(3, t_us=0.0)
+    c.inc(2, t_us=999.9)
+    c.inc(5, t_us=1000.0)
+    assert [(s["epoch"], s["count"]) for s in c.series()] \
+        == [(0, 5), (1, 5)]
+    assert c.series()[0]["per_s"] == 5 / (1000.0 / 1e6)
+    with pytest.raises(ValueError, match="monotone"):
+        c.inc(-1, t_us=0.0)
+    d = WindowedCounter(window_us=1000.0, max_windows=3)
+    d.merge_snapshot(json.loads(json.dumps(c.snapshot())))
+    d.merge_snapshot(c.snapshot())
+    assert d.total == 20 and d.epochs[0] == 10
+
+
+# --------------------------------------------------------------------- #
+# deterministic schedules                                                #
+# --------------------------------------------------------------------- #
+def test_schedule_same_seed_bit_identical():
+    spec = LoadSpec(n_ops=64, seed=42, mode="open", dist="zipf",
+                    skew=1.3, rate_ops_s=500.0)
+    a, b = make_schedule(spec), make_schedule(spec)
+    assert a.fingerprint() == b.fingerprint()
+    np.testing.assert_array_equal(a.is_update, b.is_update)
+    np.testing.assert_array_equal(a.rank, b.rank)
+    np.testing.assert_array_equal(a.arrival_us, b.arrival_us)
+    # any field change changes the fingerprint
+    for other in (LoadSpec(n_ops=64, seed=43, mode="open",
+                           rate_ops_s=500.0),
+                  LoadSpec(n_ops=64, seed=42, mode="open",
+                           rate_ops_s=501.0),
+                  LoadSpec(n_ops=65, seed=42, mode="open",
+                           rate_ops_s=500.0)):
+        assert make_schedule(other).fingerprint() != a.fingerprint()
+
+
+def test_schedule_validation_and_clipping():
+    with pytest.raises(ValueError, match="unknown mode"):
+        make_schedule(LoadSpec(mode="ajar"))
+    with pytest.raises(ValueError, match="unknown dist"):
+        make_schedule(LoadSpec(dist="pareto"))
+    with pytest.raises(ValueError, match="skew > 1"):
+        make_schedule(LoadSpec(dist="zipf", skew=1.0))
+    with pytest.raises(ValueError, match="rate_ops_s > 0"):
+        make_schedule(LoadSpec(mode="open", rate_ops_s=0.0))
+    s = make_schedule(LoadSpec(n_ops=2000, dist="zipf", skew=1.05,
+                               retain=32))
+    assert s.rank.min() >= 1 and s.rank.max() <= 32   # clipped
+    u = make_schedule(LoadSpec(n_ops=2000, dist="uniform", retain=32))
+    assert u.rank.min() >= 1 and u.rank.max() <= 32
+
+
+def test_open_arrivals_strictly_increasing_at_rate():
+    s = make_schedule(LoadSpec(n_ops=4000, seed=5, mode="open",
+                               rate_ops_s=1000.0))
+    assert np.all(np.diff(s.arrival_us) > 0)
+    mean_gap = float(np.diff(s.arrival_us).mean())
+    assert 800.0 < mean_gap < 1250.0          # ~1000us at 1k ops/s
+    c = make_schedule(LoadSpec(n_ops=8, mode="closed"))
+    assert not c.arrival_us.any()             # closed loop: no pacing
+
+
+# --------------------------------------------------------------------- #
+# timeline + excursion attribution                                       #
+# --------------------------------------------------------------------- #
+def test_timeline_half_open_range_and_recorder_mirror():
+    fr = FlightRecorder(capacity=8, clock=lambda: 0.0)
+    tl = EventTimeline(epoch_ns=0, recorder=fr)
+    tl.annotate("snapshot", t_us=100.0, horizon=3)
+    tl.annotate("truncate", t_us=200.0)
+    assert [e["kind"] for e in tl.in_range(100.0, 200.0)] \
+        == ["snapshot"]                        # half-open: 200 excluded
+    assert tl.in_range(200.0, 300.0)[0]["kind"] == "truncate"
+    kinds = [e["kind"] for e in fr.entries()]
+    assert kinds == ["snapshot", "truncate"]   # mirrored into the ring
+    assert all(e["type"] == "annotation" for e in fr.entries())
+
+
+def test_attribute_excursions_slack_mincount_and_unexplained():
+    tl = EventTimeline(epoch_ns=0)
+    tl.annotate("snapshot", t_us=95.0)         # just BEFORE window 1
+    base = {"count": 10, "p99_us": 10.0}
+    series = [
+        dict(epoch=0, t_start_us=0.0, t_end_us=100.0, **base),
+        dict(epoch=1, t_start_us=100.0, t_end_us=200.0, count=10,
+             p99_us=80.0),                     # excursion, event at -5us
+        dict(epoch=2, t_start_us=200.0, t_end_us=300.0, **base),
+        dict(epoch=3, t_start_us=300.0, t_end_us=400.0, count=10,
+             p99_us=90.0),                     # excursion, NO event
+        dict(epoch=4, t_start_us=400.0, t_end_us=500.0, **base),
+        dict(epoch=5, t_start_us=500.0, t_end_us=600.0, count=0,
+             p99_us=float("nan")),             # empty window: ignored
+    ]                                          # baseline median = 10
+    out = attribute_excursions(series, tl, factor=3.0, slack_us=10.0)
+    assert [(x["epoch"], [e["kind"] for e in x["events"]])
+            for x in out] == [(1, ["snapshot"]), (3, [])]
+    assert all(x["baseline_us"] == 10.0 for x in out)
+    # without slack the just-before event no longer attributes
+    out2 = attribute_excursions(series, tl, factor=3.0, slack_us=0.0)
+    assert [x["events"] for x in out2] == [[], []]
+    # min_count filters thin windows out of baseline AND excursions
+    assert attribute_excursions(series, tl, factor=3.0,
+                                min_count=11) == []
+
+
+# --------------------------------------------------------------------- #
+# flight recorder                                                        #
+# --------------------------------------------------------------------- #
+def test_flight_recorder_ring_bounds_and_dump(tmp_path):
+    fr = FlightRecorder(capacity=3, clock=lambda: 7.0)
+    for i in range(10):
+        fr.note("annotation", {"kind": "k", "i": i})
+    fr.on_event("flush", target="log_0001.json")
+    assert len(fr.entries()) == 3              # bounded
+    assert fr.seen == 11
+    assert [e["type"] for e in fr.entries()] \
+        == ["annotation", "annotation", "persist"]
+    assert fr.entries()[-1]["kind"] == "flush"
+    p = tmp_path / "dump.json"
+    d = fr.dump("slo_breach", path=p,
+                restart_timing={"total_us": 5.0})
+    assert (d["reason"], d["n_entries"], d["seen"], d["dropped"]) \
+        == ("slo_breach", 3, 11, 8)
+    assert d["restart_timing"] == {"total_us": 5.0}
+    assert json.loads(p.read_text())["reason"] == "slo_breach"
+    assert fr.dumps == ["slo_breach"]
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0)
+
+
+# --------------------------------------------------------------------- #
+# harness end-to-end (RequestLog in a tmp dir)                           #
+# --------------------------------------------------------------------- #
+def test_harness_closed_loop_report(tmp_path):
+    spec = LoadSpec(n_ops=24, seed=9, dist="zipf", skew=1.4,
+                    update_frac=0.6, batch=3, window_us=5_000.0,
+                    retain=32, snapshot_every=4, warmup_ops=2)
+    rep = LoadHarness(str(tmp_path / "l"), spec).run()
+    assert rep["target"] == "log"
+    assert rep["ops"] == 24 and rep["rids_processed"] == 72
+    assert rep["p99_us"] >= rep["p50_us"] > 0
+    assert rep["sustained_ops_s"] > 0
+    assert rep["schedule_fingerprint"] \
+        == make_schedule(spec).fingerprint()
+    kinds = {e["kind"] for e in rep["timeline"]}
+    assert "log_open" in kinds and "snapshot" in kinds
+    assert sum(r["count"] for r in rep["series"]) == 24
+    assert rep["counters"]["commits"] > 0
+    assert rep["counters"]["snapshots"] > 0
+    assert rep["flight"]["seen"] > 0 and not rep["flight"]["dumps"]
+
+
+def test_harness_crash_dump_and_recovery(tmp_path):
+    flight = tmp_path / "flight.json"
+    spec = LoadSpec(n_ops=16, seed=2, dist="uniform", update_frac=0.7,
+                    batch=2, window_us=20_000.0, retain=16,
+                    snapshot_every=None, warmup_ops=2, crash_at_op=8,
+                    crash_evict="torn")
+    rep = LoadHarness(str(tmp_path / "c"), spec,
+                      flight_path=str(flight)).run()
+    cr = rep["crash"]
+    assert cr["no_acked_lost"] is True
+    assert cr["evict"] == "torn"
+    rt = cr["restart_timing"]
+    assert rt["total_us"] > 0
+    assert set(rt) >= {"load_snapshot_us", "replay_us", "trim_us",
+                       "total_us", "records_parsed"}
+    kinds = [e["kind"] for e in rep["timeline"]]
+    for k in ("crash", "recovery_begin", "recovery_end"):
+        assert k in kinds
+    d = json.loads(flight.read_text())
+    assert d["reason"] == "injected_crash"
+    assert d["no_acked_lost"] is True
+    assert d["restart_timing"]["total_us"] > 0
+    assert d["n_entries"] > 0
+    types = {e["type"] for e in d["entries"]}
+    assert "span" in types and "persist" in types
+    assert rep["flight"]["dumps"] == ["injected_crash"]
+
+
+def test_restart_timing_phases_on_plain_reopen(tmp_path):
+    from repro.serving.engine import RequestLog
+    log = RequestLog(tmp_path, capacity=256)
+    log.commit({1: [1], 2: [2]})
+    log.snapshot()
+    log.commit({3: [3]})
+    again = RequestLog(tmp_path, capacity=256)
+    rt = again.restart_timing
+    assert rt["snapshot_loaded"] is True
+    assert rt["records_parsed"] == 1        # only the post-snapshot one
+    assert rt["total_us"] >= rt["replay_us"] >= 0
+    assert all(again.took_effect([1, 2, 3]))
+
+
+# --------------------------------------------------------------------- #
+# bench-history regression gate                                          #
+# --------------------------------------------------------------------- #
+def _bench_tools():
+    sys.path.insert(0, os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "tools")))
+    import bench_history
+    return bench_history
+
+
+def _fake_bench(p99=400.0, ops=5000.0, speedup=40.0):
+    return {"insert": {"parallel_us_per_op": 2.0, "speedup": speedup},
+            "serving_load": {"points": {"closed_zipf1.1": {
+                "p50_us": 100.0, "p99_us": p99,
+                "sustained_ops_s": ops}}}}
+
+
+def test_bench_history_extract_wildcards():
+    bh = _bench_tools()
+    scalars = bh.extract(_fake_bench())
+    assert scalars["serving_load.points.closed_zipf1.1.p99_us"] \
+        == (400.0, "lower")
+    assert scalars["serving_load.points.closed_zipf1.1"
+                   ".sustained_ops_s"] == (5000.0, "higher")
+    assert scalars["insert.speedup"] == (40.0, "higher")
+    assert "serving_load.points.closed_zipf1.1.p50_us" in scalars
+    # absent sections are skipped, not errors
+    assert bh.extract({}) == {}
+
+
+def test_bench_history_detects_seeded_synthetic_regression():
+    """The acceptance witness: noise-band history from seeded jittered
+    runs; a big latency/throughput regression is flagged, an equally
+    big improvement is not."""
+    bh = _bench_tools()
+    history = bh.load_history("/nonexistent/BENCH_history.json")
+    rng = np.random.default_rng(77)
+    for i in range(5):
+        jit = 1.0 + float(rng.normal(0, 0.02))
+        bh.append_entry(history,
+                        bh.extract(_fake_bench(p99=400.0 * jit,
+                                               ops=5000.0 / jit)),
+                        run_id=f"seed-{i}")
+    assert len(history["entries"]) == 5
+
+    clean = bh.check(bh.extract(_fake_bench()), history)
+    assert clean["regressions"] == [] and clean["checked"] == 5
+
+    bad = bh.check(bh.extract(_fake_bench(p99=2000.0, ops=900.0,
+                                          speedup=8.0)), history)
+    names = {r["name"] for r in bad["regressions"]}
+    assert names == {"serving_load.points.closed_zipf1.1.p99_us",
+                     "serving_load.points.closed_zipf1.1"
+                     ".sustained_ops_s",
+                     "insert.speedup"}
+    # direction-aware: a 5x IMPROVEMENT never regresses
+    good = bh.check(bh.extract(_fake_bench(p99=80.0, ops=25000.0,
+                                           speedup=200.0)), history)
+    assert good["regressions"] == []
+    assert len(good["improved"]) >= 3
+
+
+def test_bench_history_min_runs_and_bounded_entries(tmp_path):
+    bh = _bench_tools()
+    history = bh.load_history(tmp_path / "none.json")
+    for i in range(2):
+        bh.append_entry(history, bh.extract(_fake_bench()),
+                        run_id=f"r{i}")
+    v = bh.check(bh.extract(_fake_bench()), history, min_runs=3)
+    assert v["checked"] == 0 and len(v["new"]) == 5   # under min_runs
+    for i in range(60):
+        bh.append_entry(history, bh.extract(_fake_bench()),
+                        run_id=f"r{i}", max_entries=50)
+    assert len(history["entries"]) == 50              # bounded
+    # corrupted history self-heals to empty
+    p = tmp_path / "h.json"
+    p.write_text("{not json")
+    assert bh.load_history(p) == {"format": 1, "entries": []}
+
+
+def test_bench_history_cli_strict_exit_codes(tmp_path):
+    bh_path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "tools", "bench_history.py"))
+    bench = tmp_path / "bench.json"
+    hist = tmp_path / "hist.json"
+    for i in range(3):
+        bench.write_text(json.dumps(_fake_bench(p99=400.0 + i)))
+        subprocess.run([sys.executable, bh_path, "--bench", str(bench),
+                        "--history", str(hist), "--append",
+                        "--run-id", f"s{i}"], check=True,
+                       capture_output=True)
+    bench.write_text(json.dumps(_fake_bench(p99=4000.0)))
+    report_only = subprocess.run(
+        [sys.executable, bh_path, "--bench", str(bench),
+         "--history", str(hist), "--check"],
+        capture_output=True, text=True)
+    assert report_only.returncode == 0               # report-only
+    assert "REGRESSION" in report_only.stdout
+    strict = subprocess.run(
+        [sys.executable, bh_path, "--bench", str(bench),
+         "--history", str(hist), "--check", "--strict"],
+        capture_output=True, text=True)
+    assert strict.returncode == 1                    # gate fires
+    missing = subprocess.run(
+        [sys.executable, bh_path, "--bench",
+         str(tmp_path / "absent.json"), "--check"],
+        capture_output=True, text=True)
+    assert missing.returncode == 2

@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Perf-regression gate over BENCH_nvt.json history.
+
+    python tools/bench_history.py --bench BENCH_nvt.json \
+        --history BENCH_history.json [--append --run-id <label>] \
+        [--check [--strict]] [--json CHECK.json]
+
+Two verbs, composable in one invocation:
+
+* ``--append`` extracts the tracked scalars (``SCALARS`` below: us/op
+  per engine section, serving p50/p99, sustained ops/s, overhead and
+  restart ratios) from the bench report and appends one entry to
+  ``BENCH_history.json`` (bounded to ``--max-entries``, oldest
+  dropped).
+* ``--check`` compares the current bench against the history using
+  **noise bands from repeated-trial spread**: per scalar, the baseline
+  is the median of the historical values and the band is
+  ``max(band_k * MAD, rel_slack * |median|)`` — so a scalar with a
+  noisy history gets a wide band and a stable one a floor of
+  ``rel_slack`` (shared CI runners are not a metrology lab).
+  Direction-aware: a lower-is-better scalar regresses only *upward*, a
+  higher-is-better one only *downward*; improvements never fail.
+  Scalars with fewer than ``--min-runs`` historical samples are
+  reported as ``new`` and never gate.
+
+``--check`` alone is **report-only** (exit 0, regressions printed);
+``--strict`` makes regressions exit 1 — the CI lane runs report-only
+for one PR before the gate becomes blocking (see docs/benchmarks.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from statistics import median
+
+# (dotted path with "*" wildcards, direction).  Direction "lower":
+# bigger is a regression (latency, us/op, overhead ratios); "higher":
+# smaller is a regression (throughput, speedups).
+SCALARS = [
+    ("insert.parallel_us_per_op", "lower"),
+    ("insert.speedup", "higher"),
+    ("mixed.*.parallel_us_per_op", "lower"),
+    ("mixed.*.speedup", "higher"),
+    ("restart.flat_ratio_snap", "lower"),
+    ("restart.growth_ratio_nosnap", "higher"),
+    ("obs.overhead.ratio", "lower"),
+    ("obs.serving.p50_us", "lower"),
+    ("obs.serving.p99_us", "lower"),
+    ("serving_load.points.*.p50_us", "lower"),
+    ("serving_load.points.*.p99_us", "lower"),
+    ("serving_load.points.*.sustained_ops_s", "higher"),
+]
+
+
+def _walk(node, parts, prefix):
+    """Yield (dotted-name, value) for one wildcard path."""
+    if not parts:
+        if isinstance(node, (int, float)) and not isinstance(node, bool):
+            yield prefix, float(node)
+        return
+    head, rest = parts[0], parts[1:]
+    if not isinstance(node, dict):
+        return
+    keys = sorted(node) if head == "*" else ([head] if head in node
+                                             else [])
+    for k in keys:
+        yield from _walk(node[k], rest,
+                         f"{prefix}.{k}" if prefix else k)
+
+
+def extract(bench: dict) -> dict:
+    """``{scalar_name: (value, direction)}`` for every tracked scalar
+    present in the bench report — absent sections are simply skipped,
+    so partial bench runs produce partial entries."""
+    out = {}
+    for path, direction in SCALARS:
+        for name, v in _walk(bench, path.split("."), ""):
+            out[name] = (v, direction)
+    return out
+
+
+def load_history(path) -> dict:
+    try:
+        h = json.loads(Path(path).read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"format": 1, "entries": []}
+    h.setdefault("entries", [])
+    return h
+
+
+def append_entry(history: dict, scalars: dict, run_id: str,
+                 max_entries: int = 50) -> None:
+    history["entries"].append(
+        {"run": run_id, "scalars": {k: v for k, (v, _) in
+                                    sorted(scalars.items())}})
+    del history["entries"][:-max_entries]
+
+
+def check(scalars: dict, history: dict, *, min_runs: int = 3,
+          band_k: float = 5.0, rel_slack: float = 0.5) -> dict:
+    """Compare current scalars against history noise bands.
+
+    Returns ``{"checked", "regressions": [...], "improved": [...],
+    "new": [...]}``; a regression entry carries the value, baseline,
+    band and the history spread it was judged against.
+    """
+    series = {}
+    for e in history["entries"]:
+        for k, v in e["scalars"].items():
+            series.setdefault(k, []).append(float(v))
+    regressions, improved, new, checked = [], [], [], 0
+    for name, (cur, direction) in sorted(scalars.items()):
+        hist = series.get(name, [])
+        if len(hist) < min_runs:
+            new.append(name)
+            continue
+        checked += 1
+        base = median(hist)
+        mad = median(abs(v - base) for v in hist)
+        band = max(band_k * mad, rel_slack * abs(base))
+        delta = cur - base if direction == "lower" else base - cur
+        row = {"name": name, "direction": direction, "value": cur,
+               "baseline": base, "band": band, "mad": mad,
+               "n_history": len(hist)}
+        if delta > band:
+            regressions.append(row)
+        elif delta < -band:
+            improved.append(row)
+    return {"checked": checked, "regressions": regressions,
+            "improved": improved, "new": new}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_nvt.json")
+    ap.add_argument("--history", default="BENCH_history.json")
+    ap.add_argument("--append", action="store_true")
+    ap.add_argument("--run-id", default="local")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regression (default: report-only)")
+    ap.add_argument("--min-runs", type=int, default=3)
+    ap.add_argument("--band-k", type=float, default=5.0)
+    ap.add_argument("--rel-slack", type=float, default=0.5)
+    ap.add_argument("--max-entries", type=int, default=50)
+    ap.add_argument("--json", default=None,
+                    help="write the check verdict to this file")
+    args = ap.parse_args()
+
+    try:
+        bench = json.loads(Path(args.bench).read_text())
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"bench_history: cannot read {args.bench}: {e}",
+              file=sys.stderr)
+        return 2
+    scalars = extract(bench)
+    history = load_history(args.history)
+    print(f"bench_history: {len(scalars)} tracked scalars in "
+          f"{args.bench}, {len(history['entries'])} history entries")
+
+    verdict = None
+    if args.check:
+        verdict = check(scalars, history, min_runs=args.min_runs,
+                        band_k=args.band_k, rel_slack=args.rel_slack)
+        for r in verdict["regressions"]:
+            print(f"REGRESSION {r['name']}: {r['value']:.4g} vs "
+                  f"baseline {r['baseline']:.4g} "
+                  f"(band +-{r['band']:.4g}, {r['direction']}-is-better,"
+                  f" n={r['n_history']})")
+        for r in verdict["improved"]:
+            print(f"improved   {r['name']}: {r['value']:.4g} vs "
+                  f"baseline {r['baseline']:.4g}")
+        print(f"bench_history: checked={verdict['checked']} "
+              f"regressions={len(verdict['regressions'])} "
+              f"improved={len(verdict['improved'])} "
+              f"new={len(verdict['new'])}")
+        if args.json:
+            Path(args.json).write_text(
+                json.dumps(verdict, indent=1, sort_keys=True))
+
+    if args.append:
+        append_entry(history, scalars, args.run_id,
+                     max_entries=args.max_entries)
+        Path(args.history).write_text(
+            json.dumps(history, indent=1, sort_keys=True))
+        print(f"bench_history: appended run {args.run_id!r} -> "
+              f"{args.history} ({len(history['entries'])} entries)")
+
+    if args.check and args.strict and verdict["regressions"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,6 +44,9 @@ DOCTEST_MODULES = [
     "repro.analysis.persistlint",
     "repro.analysis.checker",
     "repro.obs.metrics",
+    "repro.obs.windows",
+    "repro.obs.timeline",
+    "repro.obs.loadgen",
 ]
 MIN_DOCTESTS = 6
 

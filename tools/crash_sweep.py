@@ -14,9 +14,14 @@ acknowledged op lost, prefix durability, oracle equivalence.
     PYTHONPATH=src python tools/crash_sweep.py --list
 
 Exit status is nonzero if any site × eviction-mode run violates an
-invariant.  ``--shards N`` sizes the rebalance layer's mesh (N > 1
-needs that many JAX devices, e.g. XLA_FLAGS
-``--xla_force_host_platform_device_count=N``).
+invariant.  ``--shards N`` sizes the rebalance layer's mesh *and* — for
+N > 1 — runs the ``log``/``log2`` scenarios with their dedup index on
+the sharded durable-map backend (``log_shards``-style serving); both
+need that many JAX devices, e.g. XLA_FLAGS
+``--xla_force_host_platform_device_count=N``.  ``--evict`` accepts the
+``torn`` partial-write adversary alongside ``none``/``random``: evicted
+staged files land truncated or garbled, and recovery must treat them
+exactly like torn records.
 """
 from __future__ import annotations
 
@@ -36,11 +41,13 @@ def main() -> int:
     ap.add_argument("--budget", type=int, default=None,
                     help="max sites tested per layer per evict mode "
                          "(evenly spaced; default: every site)")
-    ap.add_argument("--evict", default="none,random",
-                    help="comma list of eviction adversary modes")
+    ap.add_argument("--evict", default="none,random,torn",
+                    help="comma list of eviction adversary modes "
+                         "(none, random, torn)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--shards", type=int, default=1,
-                    help="mesh size for the rebalance layer")
+                    help="mesh size for the rebalance layer; > 1 also "
+                         "runs log/log2 with a sharded dedup index")
     ap.add_argument("--list", action="store_true",
                     help="only enumerate and print the sites, no sweep")
     ap.add_argument("--json", default=None,
@@ -55,10 +62,16 @@ def main() -> int:
     evict_modes = [m.strip() for m in args.evict.split(",") if m.strip()]
 
     report = {"budget": args.budget, "seed": args.seed,
-              "evict_modes": evict_modes, "layers": {}}
+              "evict_modes": evict_modes, "shards": args.shards,
+              "layers": {}}
     failed = False
     for layer in layers:
-        kw = {"n_shards": args.shards} if layer == "rebalance" else None
+        if layer == "rebalance":
+            kw = {"n_shards": args.shards}
+        elif layer in ("log", "log2") and args.shards > 1:
+            kw = {"shards": args.shards}
+        else:
+            kw = None
         if args.list:
             for s in enumerate_sites(SCENARIOS[layer], kw):
                 print(f"{layer:10s} site {s.index:3d}  {s.kind:7s} "

@@ -253,6 +253,149 @@ def bench_nvt(rows, out_json="BENCH_nvt.json"):
                  f"bit_exact={bit_exact}"))
 
 
+def bench_nvt_ordered(rows, out_json="BENCH_nvt.json"):
+    """OrderedNVT: the plan/commit engine on the sorted bottom list.
+
+    (a) mixed insert/delete batch over a pre-populated ordered map —
+        sequential scan oracle (:func:`repro.core.ordered.apply_ordered`,
+        one head-to-predecessor walk per op) vs one
+        ``update_parallel_ordered`` round descending the volatile
+        towers, with a bit-identical state/ok/accounting check *and* a
+        pure-dict+sorted oracle content check;
+    (b) volatile tower (re)build cost — the Property 2 reconstruction
+        the recovery path pays;
+    (c) ordered reads on a seeded zipf workload: ``range_query`` (every
+        answer checked against the sorted-dict oracle) and ``top_k``
+        us/query.
+
+    The batch here is sized so the O(n²)-walk scan oracle stays a
+    few-second bench; the 20k-op acceptance identity runs in
+    ``tests/test_ordered.py`` (slow lane).
+    """
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ordered as O
+
+    CAP = 1 << 13
+    PREPOP = 2_000
+    N_OPS = 4_000
+    KEYSPACE = 40_000
+    rng = np.random.default_rng(NVT_MIXED_SEED)
+    pre = np.sort(rng.choice(np.arange(1, KEYSPACE), PREPOP,
+                             replace=False)).astype(np.int32)
+    st0 = O.make_ordered(CAP)
+    st0, ok0, _ = O.update_parallel_ordered(
+        st0, np.zeros(PREPOP, np.int32), pre, pre * 3)
+    assert bool(np.asarray(ok0).all())
+    model: dict = {}
+    O.oracle_apply(model, np.zeros(PREPOP, np.int32), pre, pre * 3,
+                   capacity=CAP)
+    jax.block_until_ready(st0)
+
+    # (a) one mixed batch: ~half hits (deletes/duplicate inserts), half
+    # fresh keys — duplicate-key groups and shared predecessors included
+    ops = rng.integers(0, 2, N_OPS).astype(np.int32)
+    ks = np.where(rng.random(N_OPS) < 0.5,
+                  rng.choice(pre, N_OPS),
+                  rng.integers(1, KEYSPACE, N_OPS)).astype(np.int32)
+    vs = rng.integers(0, 10_000, N_OPS).astype(np.int32)
+
+    def timed(fn, reps=3):
+        fn()                                   # compile (excluded)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return out, best
+
+    towers0, t_towers = timed(lambda: O.build_towers(st0))
+    (st_s, ok_s), t_scan = timed(lambda: jax.block_until_ready(
+        O.apply_ordered(st0, jnp.asarray(ops), jnp.asarray(ks),
+                        jnp.asarray(vs))), reps=2)
+    (st_p, ok_p, stats), t_par = timed(lambda: jax.block_until_ready(
+        O.update_parallel_ordered(st0, ops, ks, vs, towers=towers0)))
+    ident = all(
+        bool(jnp.array_equal(getattr(st_s, f), getattr(st_p, f)))
+        for f in st_s._fields) and bool(jnp.array_equal(ok_s, ok_p))
+    ok_m = O.oracle_apply(model, ops, ks, vs, capacity=CAP)
+    dict_ident = (O.items_host(st_p) == model
+                  and bool(np.array_equal(np.asarray(ok_p),
+                                          np.asarray(ok_m, bool))))
+
+    # (c) ordered reads over the post-batch state, seeded zipf spans
+    towers = O.build_towers(st_p)
+    spans = []
+    for _ in range(64):
+        lo = int((rng.zipf(1.3) * 37) % KEYSPACE)
+        spans.append((lo, lo + int(rng.integers(50, 2_000))))
+    range_ident = True
+    for lo, hi in spans:
+        want = O.oracle_range(model, lo, hi)
+        total, rk, rv = O.range_query(st_p, lo, hi, 1024, towers)
+        got = list(zip(np.asarray(rk)[:len(want)].tolist(),
+                       np.asarray(rv)[:len(want)].tolist()))
+        range_ident &= (int(total) == len(want) and got == want)
+
+    def range_all():
+        for lo, hi in spans:
+            out = O.range_query(st_p, lo, hi, 1024, towers)
+        return jax.block_until_ready(out)
+
+    _, t_range = timed(range_all)
+    cnt, tk_keys, tk_vals = O.top_k(st_p, 128)
+    alive = sorted(O.live_items(st_p))
+    topk_ident = (np.asarray(tk_keys)[:int(cnt)].tolist()
+                  == alive[-int(cnt):])
+    _, t_topk = timed(lambda: jax.block_until_ready(
+        O.top_k(st_p, 128)))
+
+    report = _load_report(out_json)
+    report["ordered"] = {
+        "capacity": CAP,
+        "prepop": PREPOP,
+        "batch_ops": N_OPS,
+        "scan_us_per_op": t_scan / N_OPS * 1e6,
+        "parallel_us_per_op": t_par / N_OPS * 1e6,
+        "speedup": t_scan / t_par,
+        "state_identical": bool(ident),
+        "dict_oracle_identical": bool(dict_ident),
+        "fences_scan": int(st_s.fences),
+        "fences_parallel": int(st_p.fences),
+        "coalesced_fences": int(stats.coalesced_fences),
+        "max_conflict_group": int(stats.max_group),
+        "conflict_groups": int(stats.conflict_groups),
+        "tower_build_us": t_towers * 1e6,
+        "range": {
+            "queries": len(spans),
+            "max_items": 1024,
+            "us_per_query": t_range / len(spans) * 1e6,
+            "identical": bool(range_ident),
+        },
+        "top_k": {
+            "k": 128,
+            "us_per_call": t_topk * 1e6,
+            "identical": bool(topk_ident),
+        },
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    o = report["ordered"]
+    rows.append(("ordered,mixed_scan", o["scan_us_per_op"],
+                 f"batch={N_OPS}"))
+    rows.append(("ordered,mixed_parallel", o["parallel_us_per_op"],
+                 f"speedup={o['speedup']:.1f}x;"
+                 f"state_identical={o['state_identical']};"
+                 f"dict_oracle_identical={o['dict_oracle_identical']}"))
+    rows.append(("ordered,range_query", o["range"]["us_per_query"],
+                 f"identical={o['range']['identical']}"))
+    rows.append(("ordered,top_k", o["top_k"]["us_per_call"],
+                 f"identical={o['top_k']['identical']}"))
+
+
 def bench_nvt_migrate(rows, out_json="BENCH_nvt.json"):
     """Online-growth section: a map seeded at capacity C absorbs 8C
     inserts under live mixed traffic, growing itself through the bounded
@@ -834,9 +977,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5a,fig5b,fig5c,fig5d,fig5e,fig5f,"
-                         "fig6,hashmap,batched,nvt,migrate,sharded,"
-                         "rebalance_live,restart,obs,ckpt,kernels,"
-                         "roofline")
+                         "fig6,hashmap,batched,nvt,ordered,migrate,"
+                         "sharded,rebalance_live,restart,obs,ckpt,"
+                         "kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -846,6 +989,8 @@ def main() -> None:
         bench_batched_hashmap(rows)
     if only is None or only & {"nvt", "batched"}:
         bench_nvt(rows)
+    if only is None or "ordered" in only:
+        bench_nvt_ordered(rows)
     if only is None or "migrate" in only:
         bench_nvt_migrate(rows)
     if only is None or "sharded" in only:

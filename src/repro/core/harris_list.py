@@ -242,6 +242,26 @@ class HarrisList(TraversalDS):
     def contents(self) -> dict:
         return self._walk(self.mem.volatile)
 
+    def sorted_snapshot(self) -> List[tuple]:
+        """One bottom-level walk returning ``[(key, addr), …]`` of every
+        *unmarked* node in list (= key) order — the batch form of the
+        traversal, exposed so callers that need every node (the skiplist
+        index rebuild, the batch-parallel ordered engine's differential
+        tests) pay one O(n) walk instead of one traversal per key."""
+        image = self.mem.volatile
+        out: List[tuple] = []
+        seen = set()
+        curr, _ = unpack(int(image[self.head + NXT]))
+        while curr != NULLPTR and curr != self.tail:
+            if curr in seen:
+                raise AssertionError("cycle in list")
+            seen.add(curr)
+            w = int(image[curr + NXT])
+            if not is_marked(w):
+                out.append((int(image[curr + KEY]), curr))
+            curr, _ = unpack(w)
+        return out
+
     def persistent_contents(self) -> dict:
         return self._walk(self.mem.persistent)
 

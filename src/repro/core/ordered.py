@@ -1,0 +1,763 @@
+"""OrderedNVT: JAX-native batch-parallel durable *ordered* map.
+
+The plan/commit split of :mod:`repro.core.batched`, lifted from the hash
+map onto the paper's canonical traversal structure — a skiplist whose
+**persistent core is only the sorted bottom-level list** (Property 2:
+"only a linked list at the bottom level holds all the data, while the
+rest of the nodes and edges simply serve as a way to access the linked
+list faster").  Concretely:
+
+  * the **bottom list** is a node-pool array structure (``key`` /
+    ``val`` / ``nxt`` / ``live``) threaded in strictly ascending key
+    order off a reserved head sentinel (node 0, key −∞).  Deletes are
+    logical marks; nodes are never unlinked inside a batch — exactly the
+    hash engine's crash model, so a crash mid-batch durably commits a
+    *prefix* of the batch;
+  * the **index towers are volatile**: a :class:`TowerIndex` of
+    per-level sorted ``(key, addr)`` arrays whose promotion heights come
+    from :func:`repro.core.skiplist.tower_heights` — the deterministic
+    geometric(1/2) hash promotion of the seed skiplist — so the index
+    rebuilt after a crash from the recovered bottom list is
+    **bit-identical** to the pre-crash one (the optional Property 2
+    reconstruction function, batch form);
+  * *plan* (the journey): a ``vmap``-parallel descent of the towers plus
+    a bottom-list walk locates every op's **predecessor** — the last
+    physical node with key strictly below the op's key — against the
+    pre-batch snapshot, with zero persistence accounting;
+  * *commit* (the destination): duplicate-key conflicts are resolved by
+    the same per-key liveness-composition segment scan as
+    ``update_parallel`` (``ok = is_insert XOR prev_live``, snapshot
+    seed, first successful insert of an absent key allocates, capacity
+    failure kills the whole key group); the *conflict group* is the
+    **predecessor node** instead of the hash bucket: all fresh nodes
+    sharing a predecessor splice into one gap, linked in ascending key
+    order — which reproduces, bit for bit, the chain the sequential
+    scan oracle :func:`apply_ordered` leaves behind (node ids are
+    assigned in batch order, links end up sorted);
+  * per-op NVTraverse accounting is identical to the hash engine
+    (fresh insert = flush(node), fence, publish CAS on ``pred.nxt``,
+    flush(pred line), fence → 2 flushes + 2 fences; resurrect/delete =
+    1 flush + 2 fences), and :class:`OrderedCommitStats` reports the
+    coalesced batch cost — ``2 × (largest same-predecessor group)``
+    fences, à la the bucket fence coalescing of the hash engine.
+
+On top of the traversal ride the ordered primitives the hash map cannot
+answer: :func:`range_query`, :func:`scan` (ordered prefix), and
+:func:`top_k` — all journeys, zero persistence.
+
+:class:`DurableOrderedMap` is the durable deployment surface: committed
+batches are journaled through :class:`repro.persistence.manifest.
+StagedIO` (write → flush → fence → atomic publish per round, snapshot +
+trim for bounded restart), so the PR 6 :class:`~repro.robustness.
+faultinject.CrashPlan` crash sites and the PR 7 PersistLint trace
+checker apply to the ordered layer unmodified.
+
+Pure host-side oracle (what every differential test checks against —
+dict + ``sorted``, no engine code):
+
+>>> items = {}
+>>> oracle_apply(items, [0, 0, 1], [5, 3, 5], [50, 30, 0], capacity=8)
+[True, True, True]
+>>> sorted((k, lv) for k, (lv, _) in items.items())
+[(3, True), (5, False)]
+>>> oracle_range(items, 0, 9)
+[(3, 30)]
+"""
+from __future__ import annotations
+
+import json
+from functools import partial
+from pathlib import Path
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched import NIL, OP_DELETE, OP_INSERT
+from .skiplist import tower_heights
+
+KEY_MIN = -(2 ** 31)        # head-sentinel key (node 0): -inf
+KEY_PAD = 2 ** 31 - 1       # tower padding: +inf.  Valid keys are in
+                            # (KEY_MIN, KEY_PAD) — the int32 interior.
+MAX_LEVEL = 8               # default tower height cap (seed skiplist's)
+
+
+class OrderedState(NamedTuple):
+    """The persistent bottom-level list (node pool + accounting)."""
+    key: jax.Array          # int32[N] node keys (node 0: KEY_MIN sentinel)
+    val: jax.Array          # int32[N] node values
+    nxt: jax.Array          # int32[N] ascending-key chain (NIL = end)
+    live: jax.Array         # bool[N]  logically present
+    cursor: jax.Array       # int32    bump allocator (next free node id)
+    flushes: jax.Array      # int32    persistence accounting (per-op law)
+    fences: jax.Array
+
+
+class TowerIndex(NamedTuple):
+    """The volatile auxiliary index (Property 2): per level 2..max_level
+    a sorted, KEY_PAD-padded array of the live keys promoted to that
+    level and their node addresses.  Never persisted; rebuilt
+    deterministically from the bottom list by :func:`build_towers`."""
+    keys: jax.Array         # int32[levels, N] sorted keys (pad: KEY_PAD)
+    addr: jax.Array         # int32[levels, N] node ids
+
+
+class OrderedCommitStats(NamedTuple):
+    """Coalesced batch cost at the destination, grouped by predecessor
+    node (the ordered engine's conflict unit — the gap being spliced)."""
+    ops_committed: jax.Array      # int32  ops that mutated state
+    conflict_groups: jax.Array    # int32  predecessors with ≥1 commit
+    max_group: jax.Array          # int32  largest same-pred group
+    coalesced_flushes: jax.Array  # int32
+    coalesced_fences: jax.Array   # int32  2 × max_group
+
+
+def make_ordered(capacity: int) -> OrderedState:
+    """Fresh empty ordered map.  Node 0 is the permanent head sentinel
+    (key −∞, never live) — the same reserved-slot-0 convention as the
+    hash engine, which doubles as the always-present predecessor."""
+    return OrderedState(
+        key=jnp.zeros(capacity, jnp.int32).at[0].set(KEY_MIN),
+        val=jnp.zeros(capacity, jnp.int32),
+        nxt=jnp.full(capacity, NIL, jnp.int32),
+        live=jnp.zeros(capacity, jnp.bool_),
+        cursor=jnp.int32(1),
+        flushes=jnp.int32(0),
+        fences=jnp.int32(0),
+    )
+
+
+# --------------------------------------------------------------------- #
+# the volatile towers (Property 2's reconstruction function, batch form) #
+# --------------------------------------------------------------------- #
+def build_towers(state: OrderedState, max_level: int = MAX_LEVEL
+                 ) -> TowerIndex:
+    """Deterministic volatile index over the *live* keys of ``state``.
+
+    Promotion heights are :func:`repro.core.skiplist.tower_heights` —
+    the seed skiplist's geometric(1/2) key-hash promotion — so two
+    calls on states with the same live set return bit-identical towers:
+    the post-crash rebuild equals the pre-crash index, which is exactly
+    what makes ordered crash tests deterministic."""
+    ks = np.asarray(state.key)
+    ids = np.nonzero(np.asarray(state.live))[0].astype(np.int32)
+    order = np.argsort(ks[ids], kind="stable")
+    sk, sid = ks[ids][order], ids[order]
+    h = tower_heights(sk, max_level) if sk.size else np.zeros(0, np.int32)
+    cap = int(state.key.shape[0])
+    levels = max(1, max_level - 1)
+    keys = np.full((levels, cap), KEY_PAD, np.int32)
+    addr = np.zeros((levels, cap), np.int32)
+    for lvl in range(2, max_level + 1):
+        sel = h >= lvl
+        m = int(sel.sum())
+        keys[lvl - 2, :m] = sk[sel]
+        addr[lvl - 2, :m] = sid[sel]
+    return TowerIndex(keys=jnp.asarray(keys), addr=jnp.asarray(addr))
+
+
+def _descend(tk: jax.Array, ta: jax.Array, k: jax.Array):
+    """Tower descent (the journey's shortcut): the topmost level holding
+    a key strictly below ``k`` hands over the closest such shortcut;
+    lower levels only refine.  Falls back to the head sentinel."""
+    entry = jnp.int32(0)
+    ekey = jnp.int32(KEY_MIN)
+    for lvl in range(tk.shape[0] - 1, -1, -1):
+        i = jnp.searchsorted(tk[lvl], k, side="left") - 1
+        j = jnp.maximum(i, 0)
+        ck = tk[lvl][j]
+        better = (i >= 0) & (ck > ekey)
+        entry = jnp.where(better, ta[lvl][j], entry)
+        ekey = jnp.where(better, ck, ekey)
+    return entry
+
+
+def _find_pred(state: OrderedState, tk, ta, k: jax.Array):
+    """Walk from the tower entry to the last *physical* node (live or
+    dead — deletes are logical) with key < k.  Zero persistence."""
+    entry = _descend(tk, ta, k)
+
+    def cond(pred):
+        nx = state.nxt[pred]
+        return (nx != NIL) & (state.key[nx] < k)
+
+    def body(pred):
+        return state.nxt[pred]
+
+    return jax.lax.while_loop(cond, body, entry)
+
+
+def _plan(state: OrderedState, tk, ta, ks: jax.Array):
+    """The journey, batch-wide: every op's predecessor + existing node
+    against the pre-batch snapshot, fully ``vmap``-parallel."""
+    def one(k):
+        pred = _find_pred(state, tk, ta, k)
+        nx = state.nxt[pred]
+        found = (nx != NIL) & (state.key[nx] == k)
+        node = jnp.where(found, nx, NIL)
+        return pred, node
+
+    pred, node = jax.vmap(one)(ks)
+    snap_live = (node != NIL) & state.live[node]
+    return pred, node, snap_live
+
+
+# --------------------------------------------------------------------- #
+# traversal reads (zero persistence)                                     #
+# --------------------------------------------------------------------- #
+@jax.jit
+def lookup_ordered(state: OrderedState, ks: jax.Array,
+                   towers: Optional[TowerIndex] = None):
+    """Batched ordered lookup: (found bool[B], vals int32[B])."""
+    tk, ta = _tower_arrays(state, towers)
+    pred, node, snap_live = _plan(state, tk, ta, ks.astype(jnp.int32))
+    return snap_live, jnp.where(snap_live, state.val[node], 0)
+
+
+def _tower_arrays(state: OrderedState, towers: Optional[TowerIndex]):
+    if towers is None:
+        cap = state.key.shape[0]
+        return (jnp.full((1, cap), KEY_PAD, jnp.int32),
+                jnp.zeros((1, cap), jnp.int32))
+    return towers.keys, towers.addr
+
+
+@partial(jax.jit, static_argnames="max_items")
+def range_query(state: OrderedState, lo, hi, max_items: int,
+                towers: Optional[TowerIndex] = None):
+    """Ordered range read ``[lo, hi]`` (a pure journey): returns
+    ``(total, keys int32[max_items], vals int32[max_items])`` — the
+    first ``max_items`` live keys in ascending order plus the *total*
+    live count in range (> ``max_items`` means the output is a
+    truncated prefix).  Unused slots hold :data:`KEY_PAD`."""
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    tk, ta = _tower_arrays(state, towers)
+    pred = _find_pred(state, tk, ta, lo)
+
+    def cond(c):
+        node, *_ = c
+        return (node != NIL) & (state.key[node] <= hi)
+
+    def body(c):
+        node, total, out_k, out_v = c
+        ok = state.live[node]
+        slot = jnp.where(ok & (total < max_items), total, max_items)
+        out_k = out_k.at[slot].set(state.key[node], mode="drop")
+        out_v = out_v.at[slot].set(state.val[node], mode="drop")
+        return (state.nxt[node], total + ok.astype(jnp.int32),
+                out_k, out_v)
+
+    node0 = state.nxt[pred]
+    total, out_k, out_v = jax.lax.while_loop(
+        cond, body, (node0, jnp.int32(0),
+                     jnp.full(max_items, KEY_PAD, jnp.int32),
+                     jnp.zeros(max_items, jnp.int32)))[1:]
+    return total, out_k, out_v
+
+
+def scan(state: OrderedState, max_items: int,
+         towers: Optional[TowerIndex] = None):
+    """Full ordered scan (ascending): :func:`range_query` over the whole
+    key interior."""
+    return range_query(state, KEY_MIN + 1, KEY_PAD - 1, max_items,
+                       towers)
+
+
+@partial(jax.jit, static_argnames="k")
+def top_k(state: OrderedState, k: int):
+    """The ``k`` largest live keys, ascending — one bottom-list walk
+    into a ring buffer (zero persistence).  Returns
+    ``(count, keys int32[k], vals int32[k])`` with ``count =
+    min(k, live)``; only the first ``count`` slots are meaningful."""
+    def cond(c):
+        node, *_ = c
+        return node != NIL
+
+    def body(c):
+        node, i, bk, bv = c
+        ok = state.live[node]
+        slot = jnp.where(ok, i % k, k)
+        bk = bk.at[slot].set(state.key[node], mode="drop")
+        bv = bv.at[slot].set(state.val[node], mode="drop")
+        return state.nxt[node], i + ok.astype(jnp.int32), bk, bv
+
+    _, n_live, bk, bv = jax.lax.while_loop(
+        cond, body, (state.nxt[jnp.int32(0)], jnp.int32(0),
+                     jnp.full(k, KEY_PAD, jnp.int32),
+                     jnp.zeros(k, jnp.int32)))
+    shift = jnp.where(n_live >= k, n_live % k, 0)
+    return (jnp.minimum(n_live, k), jnp.roll(bk, -shift),
+            jnp.roll(bv, -shift))
+
+
+# --------------------------------------------------------------------- #
+# sequential scan oracle (the linearization reference)                   #
+# --------------------------------------------------------------------- #
+@jax.jit
+def apply_ordered(state: OrderedState, ops: jax.Array, ks: jax.Array,
+                  vs: jax.Array):
+    """Sequential mixed oracle: the batch serialized in batch order,
+    each op one full head-to-predecessor walk.  Insert succeeds iff the
+    key is dead/absent (dead nodes resurrect in place; absent keys
+    allocate, failing cleanly when the pool is full); delete succeeds
+    iff live.  Accounting: fresh = 2 flushes, resurrect/delete = 1,
+    +2 fences per successful op — the hash oracle's exact law."""
+    cap = state.key.shape[0]
+
+    def step(st: OrderedState, okv):
+        op, k, v = okv
+
+        def cond(pred):
+            nx = st.nxt[pred]
+            return (nx != NIL) & (st.key[nx] < k)
+
+        pred = jax.lax.while_loop(cond, lambda p: st.nxt[p], jnp.int32(0))
+        nx = st.nxt[pred]
+        found = (nx != NIL) & (st.key[nx] == k)
+        node = jnp.where(found, nx, NIL)
+        exists_live = found & st.live[node]
+
+        def do_resurrect(st):
+            return st._replace(
+                val=st.val.at[node].set(v),
+                live=st.live.at[node].set(True),
+                flushes=st.flushes + 1,
+                fences=st.fences + 2,
+            ), jnp.bool_(True)
+
+        def do_fresh(st):
+            def full(st):
+                return st, jnp.bool_(False)
+
+            def alloc(st):
+                nid = st.cursor
+                return st._replace(
+                    key=st.key.at[nid].set(k),
+                    val=st.val.at[nid].set(v),
+                    nxt=st.nxt.at[nid].set(st.nxt[pred]).at[pred].set(nid),
+                    live=st.live.at[nid].set(True),
+                    cursor=st.cursor + 1,
+                    flushes=st.flushes + 2,
+                    fences=st.fences + 2,
+                ), jnp.bool_(True)
+
+            return jax.lax.cond(st.cursor < cap, alloc, full, st)
+
+        def insert_op(st):
+            def fail(st):
+                return st, jnp.bool_(False)
+
+            def attempt(st):
+                dead_here = found & ~st.live[node]
+                return jax.lax.cond(dead_here, do_resurrect, do_fresh, st)
+
+            return jax.lax.cond(exists_live, fail, attempt, st)
+
+        def delete_op(st):
+            def do(st):
+                return st._replace(
+                    live=st.live.at[node].set(False),
+                    flushes=st.flushes + 1,
+                    fences=st.fences + 2,
+                ), jnp.bool_(True)
+
+            def skip(st):
+                return st, jnp.bool_(False)
+
+            return jax.lax.cond(exists_live, do, skip, st)
+
+        return jax.lax.cond(op == OP_INSERT, insert_op, delete_op, st)
+
+    state, ok = jax.lax.scan(step, state, (ops.astype(jnp.int32),
+                                           ks.astype(jnp.int32),
+                                           vs.astype(jnp.int32)))
+    return state, ok
+
+
+# --------------------------------------------------------------------- #
+# plan/commit engine (the hot path)                                      #
+# --------------------------------------------------------------------- #
+def update_parallel_ordered(state: OrderedState, ops, ks, vs,
+                            towers: Optional[TowerIndex] = None,
+                            max_level: int = MAX_LEVEL):
+    """One plan/commit round of mixed inserts/deletes over the ordered
+    map — bit-identical to :func:`apply_ordered` (state arrays, per-op
+    ok flags, flush/fence accounting).  Returns ``(state', ok bool[B],
+    OrderedCommitStats)``.
+
+    ``towers`` (optional) is the pre-batch volatile index; when absent
+    it is rebuilt from ``state`` — either way the plan phase descends
+    it with a ``vmap`` and the commit groups conflicts by predecessor
+    node.  Passing stale towers (built from a different state) is a
+    contract violation."""
+    if towers is None:
+        towers = build_towers(state, max_level)
+    return _update_jit(state, jnp.asarray(ops, jnp.int32),
+                       jnp.asarray(ks, jnp.int32),
+                       jnp.asarray(vs, jnp.int32),
+                       towers.keys, towers.addr)
+
+
+@jax.jit
+def _update_jit(state: OrderedState, ops, ks, vs, tk, ta):
+    n = ks.shape[0]
+    cap = state.key.shape[0]
+    if n == 0:
+        z = jnp.int32(0)
+        return state, jnp.zeros(0, jnp.bool_), OrderedCommitStats(
+            z, z, z, z, z)
+
+    # ---- plan: the journey, fully parallel, zero persistence --------- #
+    pred, node, snap_live = _plan(state, tk, ta, ks)
+    is_ins = ops == OP_INSERT
+
+    # ---- merged conflict resolution: per-key liveness composition ---- #
+    order = jnp.argsort(ks)            # stable: ties keep batch order
+    sk = ks[order]
+    s_ins = is_ins[order]
+    s_node = node[order]
+    s_exists = (node != NIL)[order]
+    first = jnp.concatenate([jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    pos = jnp.arange(n, dtype=jnp.int32)
+
+    prev_live = jnp.where(
+        first, snap_live[order],
+        jnp.concatenate([jnp.zeros((1,), jnp.bool_), s_ins[:-1]]))
+    s_ok = s_ins ^ prev_live      # insert iff dead/absent, delete iff live
+    s_okins = s_ok & s_ins
+
+    # the allocator of an absent-key group is its first successful insert
+    first_okins = jnp.full(n, n, jnp.int32).at[seg].min(
+        jnp.where(s_okins, pos, n))
+    s_alloc = s_okins & (pos == first_okins[seg]) & ~s_exists
+
+    # ---- commit: allocation in batch order (oracle-identical ids) ---- #
+    alloc = jnp.zeros(n, jnp.bool_).at[order].set(s_alloc)
+    rank = jnp.cumsum(alloc.astype(jnp.int32)) - alloc
+    alloc = alloc & (state.cursor + rank < cap)
+    # a capacity-failed allocator fails its entire duplicate-key group
+    s_alloc_ok = alloc[order]
+    dead_seg = jnp.zeros(n, jnp.int32).at[seg].max(
+        (s_alloc & ~s_alloc_ok).astype(jnp.int32))
+    s_ok = s_ok & (dead_seg[seg] == 0)
+    s_okins = s_ok & s_ins
+    s_alloc = s_alloc & s_alloc_ok
+
+    s_fresh_nid = jnp.where(s_alloc, state.cursor + rank[order], 0)
+    seg_nid = jnp.zeros(n, jnp.int32).at[seg].max(s_fresh_nid)
+    s_nid = jnp.where(s_exists, s_node, seg_nid[seg])
+
+    last_ok = jnp.full(n, -1, jnp.int32).at[seg].max(
+        jnp.where(s_ok, pos, -1))
+    s_write_live = s_ok & (pos == last_ok[seg])
+    last_okins = jnp.full(n, -1, jnp.int32).at[seg].max(
+        jnp.where(s_okins, pos, -1))
+    s_write_val = s_okins & (pos == last_okins[seg])
+
+    sv = vs[order]
+    key = state.key.at[jnp.where(s_alloc, s_nid, cap)].set(sk, mode="drop")
+    val = state.val.at[jnp.where(s_write_val, s_nid, cap)].set(
+        sv, mode="drop")
+    live = state.live.at[jnp.where(s_write_live, s_nid, cap)].set(
+        s_ins, mode="drop")
+
+    # ---- chain splicing: the ordered divergence from the hash engine -- #
+    # Fresh nodes sharing a predecessor splice into one gap.  Sorting
+    # them by (pred, key) and linking each at its in-group successor —
+    # the group's last at the predecessor's *snapshot* successor, the
+    # predecessor at the group's first — yields the ascending chain the
+    # sequential oracle converges to, while node *ids* keep batch order
+    # (the allocator rank above).  Logical deletes never relink, so
+    # predecessor slots (< cursor) and fresh slots (>= cursor) are
+    # disjoint scatter targets.
+    nid_b = jnp.where(alloc, state.cursor + rank, 0)
+    pkey = jnp.where(alloc, pred, cap)          # non-fresh sort last
+    order2 = jnp.lexsort((ks, pkey))            # by pred, then key
+    sp = pkey[order2]
+    snid = nid_b[order2]
+    sfresh = alloc[order2]
+    same_next = jnp.concatenate([sp[:-1] == sp[1:],
+                                 jnp.zeros((1,), jnp.bool_)])
+    succ_snap = state.nxt[jnp.clip(sp, 0, cap - 1)]
+    link = jnp.where(same_next,
+                     jnp.concatenate([snid[1:],
+                                      jnp.zeros((1,), jnp.int32)]),
+                     succ_snap)
+    nxt = state.nxt.at[jnp.where(sfresh, snid, cap)].set(link, mode="drop")
+    group_first = sfresh & ~jnp.concatenate(
+        [jnp.zeros((1,), jnp.bool_), sp[1:] == sp[:-1]])
+    nxt = nxt.at[jnp.where(group_first, sp, cap)].set(snid, mode="drop")
+
+    # ---- accounting (the oracle's per-op law) + coalesced stats ------- #
+    ok = jnp.zeros(n, jnp.bool_).at[order].set(s_ok)
+    flushes_per_op = jnp.where(alloc, 2, jnp.where(ok, 1, 0))
+    state = state._replace(
+        key=key, val=val, nxt=nxt, live=live,
+        cursor=state.cursor + alloc.astype(jnp.int32).sum(),
+        flushes=state.flushes + flushes_per_op.sum(),
+        fences=state.fences + 2 * ok.sum(),
+    )
+    counts = jnp.zeros(cap, jnp.int32).at[pred].add(ok.astype(jnp.int32))
+    max_group = counts.max()
+    stats = OrderedCommitStats(
+        ops_committed=ok.sum().astype(jnp.int32),
+        conflict_groups=(counts > 0).sum().astype(jnp.int32),
+        max_group=max_group,
+        coalesced_flushes=jnp.where(ok, flushes_per_op, 0).sum()
+        .astype(jnp.int32),
+        coalesced_fences=(2 * max_group).astype(jnp.int32),
+    )
+    return state, ok, stats
+
+
+# --------------------------------------------------------------------- #
+# host-side helpers + the pure differential oracle                       #
+# --------------------------------------------------------------------- #
+def items_host(state: OrderedState) -> dict:
+    """Walk the bottom list on the host: ``{key: (live, val)}`` in chain
+    order — every physical node, dead ones included."""
+    key = np.asarray(state.key)
+    val = np.asarray(state.val)
+    nxt = np.asarray(state.nxt)
+    live = np.asarray(state.live)
+    out, seen = {}, set()
+    node = int(nxt[0])
+    while node != int(NIL):
+        if node in seen:
+            raise AssertionError("cycle in bottom list")
+        seen.add(node)
+        out[int(key[node])] = (bool(live[node]), int(val[node]))
+        node = int(nxt[node])
+    return out
+
+
+def live_items(state: OrderedState) -> dict:
+    """Abstract live content {key: val}."""
+    return {k: v for k, (lv, v) in items_host(state).items() if lv}
+
+
+def check_sorted(state: OrderedState) -> None:
+    """Integrity: the physical chain is strictly ascending, cycle-free,
+    and threads *every* allocated node (allocation always links)."""
+    key = np.asarray(state.key)
+    nxt = np.asarray(state.nxt)
+    node = int(nxt[0])
+    prev, n = KEY_MIN, 0
+    seen = set()
+    while node != int(NIL):
+        assert node not in seen, "cycle in bottom list"
+        seen.add(node)
+        k = int(key[node])
+        assert k > prev, f"keys not strictly sorted: {k} after {prev}"
+        prev = k
+        n += 1
+        node = int(nxt[node])
+    assert n == int(state.cursor) - 1, \
+        f"chain threads {n} nodes, {int(state.cursor) - 1} allocated"
+
+
+def oracle_apply(items: dict, ops, ks, vs, capacity: Optional[int] = None
+                 ) -> list:
+    """The pure-dict differential oracle: apply one mixed batch to
+    ``items`` (``{key: (live, val)}``, mutated in place) in batch
+    order with the engine's exact semantics — insert iff dead/absent,
+    delete iff live, a dead key keeps its node (and last value), and
+    with ``capacity`` a fresh insert fails once ``1 + len(items)``
+    (sentinel + allocated nodes) reaches the pool.  Returns per-op ok.
+
+    >>> it = {}
+    >>> oracle_apply(it, [0, 1, 0], [7, 7, 7], [70, 0, 71])
+    [True, True, True]
+    >>> it[7]
+    (True, 71)
+    >>> oracle_apply(it, [0], [9], [90], capacity=2)   # pool full
+    [False]
+    """
+    out = []
+    for o, k, v in zip(ops, ks, vs):
+        o, k, v = int(o), int(k), int(v)
+        lv, old = items.get(k, (False, 0))
+        if o == OP_INSERT:
+            if lv:
+                out.append(False)
+            elif k in items:
+                items[k] = (True, v)
+                out.append(True)
+            elif capacity is not None and 1 + len(items) >= capacity:
+                out.append(False)
+            else:
+                items[k] = (True, v)
+                out.append(True)
+        else:
+            if lv:
+                items[k] = (False, old)
+                out.append(True)
+            else:
+                out.append(False)
+    return out
+
+
+def oracle_range(items: dict, lo: int, hi: int) -> list:
+    """Sorted-dict range oracle: ascending live ``(key, val)`` in
+    ``[lo, hi]``.
+
+    >>> oracle_range({3: (True, 30), 4: (False, 0), 9: (True, 90)}, 3, 9)
+    [(3, 30), (9, 90)]
+    """
+    return sorted((k, v) for k, (lv, v) in items.items()
+                  if lv and lo <= k <= hi)
+
+
+# --------------------------------------------------------------------- #
+# the durable deployment surface (journaled batches through StagedIO)    #
+# --------------------------------------------------------------------- #
+class DurableOrderedMap:
+    """Ordered map whose committed batches are the durable surface.
+
+    Each :meth:`update` journals its batch as one staged round file —
+    write → flush → fence → atomic publish (``ord_NNNNNN.json``) —
+    *before* the in-memory engine applies it, so an acknowledged batch
+    is always recoverable and a crash replays a strict prefix of the
+    acknowledged stream (batch order is the linearization order).
+    :meth:`snapshot` publishes the full engine state (the bottom list
+    *is* the data — towers are never persisted) and trims the rounds it
+    covers, bounding restart to O(post-snapshot suffix).  Recovery
+    (``__init__``) loads the newest valid snapshot, replays the round
+    suffix through the same plan/commit engine, and rebuilds the
+    volatile towers — bit-identical to the pre-crash state by
+    construction."""
+
+    def __init__(self, root, capacity: int = 256,
+                 max_level: int = MAX_LEVEL, seed: int = 0):
+        from ..persistence.manifest import StagedIO
+        self.io = StagedIO(Path(root), seed=seed)
+        self.capacity = capacity
+        self.max_level = max_level
+        self.state = make_ordered(capacity)
+        self._n = 0                 # next round index
+        self._snap_name: Optional[str] = None
+        self._recover()
+        self.towers = build_towers(self.state, max_level)
+
+    # -- recovery ------------------------------------------------------ #
+    @staticmethod
+    def _round_index(name: str) -> Optional[int]:
+        try:
+            return int(name[len("ord_"):-len(".json")])
+        except ValueError:
+            return None
+
+    def _recover(self) -> None:
+        root = Path(self.io.root)
+        snaps = sorted(p.name for p in root.glob("osnap_*.json"))
+        horizon = 0
+        for name in reversed(snaps):
+            try:
+                data = json.loads(self.io.read(name).decode())
+                self.state = OrderedState(
+                    key=jnp.asarray(data["key"], jnp.int32),
+                    val=jnp.asarray(data["val"], jnp.int32),
+                    nxt=jnp.asarray(data["nxt"], jnp.int32),
+                    live=jnp.asarray(data["live"], jnp.bool_),
+                    cursor=jnp.int32(data["cursor"]),
+                    flushes=jnp.int32(data["flushes"]),
+                    fences=jnp.int32(data["fences"]),
+                )
+                horizon = int(data["horizon"])
+                self._snap_name = name
+                break
+            except (OSError, json.JSONDecodeError, KeyError, ValueError):
+                continue            # torn snapshot: fall back to older
+        rounds = []
+        for p in sorted(root.glob("ord_*.json")):
+            idx = self._round_index(p.name)
+            if idx is None or idx < horizon:
+                continue
+            try:
+                rounds.append((idx, json.loads(self.io.read(p.name)
+                                               .decode())))
+            except (OSError, json.JSONDecodeError, ValueError):
+                continue            # torn round (never published whole)
+        self._n = horizon
+        for idx, rec in sorted(rounds):
+            self.state, _, _ = update_parallel_ordered(
+                self.state, np.asarray(rec["ops"], np.int32),
+                np.asarray(rec["ks"], np.int32),
+                np.asarray(rec["vs"], np.int32),
+                max_level=self.max_level)
+            self._n = idx + 1
+
+    # -- the durable commit path --------------------------------------- #
+    def update(self, ops, ks, vs):
+        """Journal one mixed batch, then apply it through the plan/
+        commit engine.  Returns per-op ok flags (numpy bool[B])."""
+        rec = {"ops": [int(o) for o in ops],
+               "ks": [int(k) for k in ks],
+               "vs": [int(v) for v in vs]}
+        rel = f"ord_{self._n:06d}.json"
+        self.io.write("ord.tmp", json.dumps(rec).encode())
+        self.io.flush("ord.tmp")
+        self.io.fence()
+        self.io.publish("ord.tmp", rel)
+        self._n += 1
+        self.state, ok, _ = update_parallel_ordered(
+            self.state, np.asarray(ops, np.int32),
+            np.asarray(ks, np.int32), np.asarray(vs, np.int32),
+            towers=self.towers, max_level=self.max_level)
+        self.towers = build_towers(self.state, self.max_level)
+        return np.asarray(ok)
+
+    def insert(self, ks, vs):
+        return self.update(np.full(len(ks), OP_INSERT, np.int32), ks, vs)
+
+    def delete(self, ks):
+        return self.update(np.full(len(ks), OP_DELETE, np.int32), ks,
+                           np.zeros(len(ks), np.int32))
+
+    def snapshot(self) -> Optional[str]:
+        """Publish the engine state (bottom list only — Property 2:
+        towers stay volatile) and trim the covered rounds + the
+        superseded snapshot.  Same staged discipline as a round."""
+        if self._n == 0:
+            return None
+        payload = json.dumps({
+            "horizon": self._n,
+            "key": np.asarray(self.state.key).tolist(),
+            "val": np.asarray(self.state.val).tolist(),
+            "nxt": np.asarray(self.state.nxt).tolist(),
+            "live": np.asarray(self.state.live).astype(int).tolist(),
+            "cursor": int(self.state.cursor),
+            "flushes": int(self.state.flushes),
+            "fences": int(self.state.fences),
+        })
+        final = f"osnap_{self._n:08d}.json"
+        self.io.write("osnap.tmp", payload.encode())
+        self.io.flush("osnap.tmp")
+        self.io.fence()
+        self.io.publish("osnap.tmp", final)
+        old, self._snap_name = self._snap_name, final
+        for p in sorted(Path(self.io.root).glob("ord_*.json")):
+            idx = self._round_index(p.name)
+            if idx is not None and idx < self._n:
+                self.io.unlink(p.name)
+        if old is not None:
+            self.io.unlink(old)
+        return final
+
+    # -- reads --------------------------------------------------------- #
+    def lookup(self, ks):
+        found, vals = lookup_ordered(self.state, jnp.asarray(ks),
+                                     self.towers)
+        return np.asarray(found), np.asarray(vals)
+
+    def range(self, lo: int, hi: int, max_items: int):
+        total, ks, vs = range_query(self.state, lo, hi, max_items,
+                                    self.towers)
+        m = min(int(total), max_items)
+        return int(total), np.asarray(ks)[:m], np.asarray(vs)[:m]
+
+    def items(self) -> dict:
+        return items_host(self.state)

@@ -337,6 +337,153 @@ class MembershipIndex:
         return out
 
 
+class OrderedMembershipIndex:
+    """Membership index on the batch-parallel *ordered* engine
+    (:mod:`repro.core.ordered`) — the same ``update``/``contains``/
+    ``members`` surface as :class:`MembershipIndex`, plus the ordered
+    primitives a retention policy wants: :meth:`expired` answers "which
+    members fall below the retention horizon?" with one tower descent +
+    range walk over the sorted bottom list instead of materializing and
+    sorting the whole member set, and :meth:`range_members` exposes the
+    underlying ordered scan.  Used by the serving
+    :class:`~repro.serving.engine.RequestLog` ``ordered_dedup`` mode,
+    where keys are request ids and the eviction horizon is an
+    ordered-by-rid trim.  Ordered primitives cover in-range keys only
+    (side-table keys have no position in the bottom list).
+
+    Same int32 key envelope as the hash-backed index: in-range keys are
+    stored shifted by +1 (node 0 is the ordered map's head sentinel),
+    out-of-range keys fall back to a side set.  Growth doubles the node
+    pool and rebuilds from the live member set host-side (the ordered
+    pool has no migration engine yet — :attr:`migrations` counts these
+    rebuilds so callers can see them)."""
+
+    rebalances = 0      # single-device pool: never re-splits
+
+    def __init__(self, capacity: int = 4096, max_level: int = 8):
+        from ..core import ordered
+        self._ord = ordered
+        self.capacity = capacity
+        self.max_level = max_level
+        self.state = ordered.make_ordered(capacity)
+        self._towers = ordered.build_towers(self.state, max_level)
+        self._members: set = set()
+        self._oob: set = set()
+        self.migrations = 0
+        self.last_stats = None
+
+    _in_range = staticmethod(MembershipIndex._in_range)
+
+    @property
+    def members(self) -> set:
+        return self._members | self._oob
+
+    def _grow_for(self, n_fresh: int) -> None:
+        need = int(self.state.cursor) + n_fresh
+        while self.capacity < need:
+            self.capacity *= 2
+        self.state = self._ord.make_ordered(self.capacity)
+        live = np.asarray(sorted(self._members), np.int32)
+        if live.size:
+            self.state, ok, _ = self._ord.update_parallel_ordered(
+                self.state, np.zeros(live.size, np.int32), live + 1,
+                live + 1, max_level=self.max_level)
+            assert bool(np.asarray(ok).all())
+        self._towers = self._ord.build_towers(self.state, self.max_level)
+        self.migrations += 1
+
+    def update(self, add_keys: Iterable[int] = (),
+               remove_keys: Iterable[int] = ()) -> None:
+        """One mixed plan/commit round; a key named in both leaves
+        (adds batch first, removes last — the remove wins)."""
+        adds = {int(k) for k in add_keys}
+        rems = {int(k) for k in remove_keys}
+        self._oob.update(k for k in adds if not self._in_range(k))
+        self._oob.difference_update(k for k in rems
+                                    if not self._in_range(k))
+        ins_set = {k for k in adds
+                   if self._in_range(k) and k not in self._members}
+        del_set = {k for k in rems if self._in_range(k)
+                   and (k in self._members or k in ins_set)}
+        ins = np.asarray(sorted(ins_set), np.int32)
+        dels = np.asarray(sorted(del_set), np.int32)
+        if ins.size + dels.size == 0:
+            return
+        if int(self.state.cursor) + ins.size > self.capacity:
+            # upper bound is exact here: every planned insert is a
+            # non-member, and dead nodes resurrect without allocating
+            n_dead = len(self._dead_keys() & ins_set)
+            if int(self.state.cursor) + ins.size - n_dead > self.capacity:
+                self._grow_for(ins.size - n_dead)
+        ks = np.concatenate([ins, dels]) + 1
+        ops = np.concatenate([
+            np.full(ins.size, batched.OP_INSERT, np.int32),
+            np.full(dels.size, batched.OP_DELETE, np.int32)])
+        self.state, ok, self.last_stats = \
+            self._ord.update_parallel_ordered(
+                self.state, ops, ks, ks, towers=self._towers,
+                max_level=self.max_level)
+        ok = np.asarray(ok)
+        assert ok[:ins.size].all(), "ordered membership insert dropped"
+        self._towers = self._ord.build_towers(self.state, self.max_level)
+        self._members.update(int(k) for k in ins[ok[:ins.size]])
+        self._members.difference_update(
+            int(k) for k in dels[ok[ins.size:]])
+
+    def _dead_keys(self) -> set:
+        return {k - 1 for k, (lv, _) in
+                self._ord.items_host(self.state).items() if not lv}
+
+    def add(self, keys: Iterable[int]) -> None:
+        self.update(add_keys=keys)
+
+    def remove(self, keys: Iterable[int]) -> None:
+        self.update(remove_keys=keys)
+
+    def contains(self, keys: Sequence[int]) -> np.ndarray:
+        keys = [int(k) for k in keys]
+        out = np.zeros(len(keys), np.bool_)
+        in_range = [(i, k) for i, k in enumerate(keys)
+                    if self._in_range(k)]
+        if in_range:
+            pos, ks = zip(*in_range)
+            found, _ = self._ord.lookup_ordered(
+                self.state, jnp.asarray(ks, jnp.int32) + 1,
+                self._towers)
+            out[list(pos)] = np.asarray(found)
+        for i, k in enumerate(keys):
+            if not self._in_range(k):
+                out[i] = k in self._oob
+        return out
+
+    def range_members(self, lo: int, hi: int, max_items: int) -> list:
+        """Ascending live members in ``[lo, hi]`` (ordered scan —
+        a pure journey)."""
+        total, ks, _ = self._ord.range_query(
+            self.state, lo + 1, hi + 1, max_items, self._towers)
+        m = min(int(total), max_items)
+        return [int(k) - 1 for k in np.asarray(ks)[:m]]
+
+    def expired(self, retain: int) -> list:
+        """Members below the retention horizon, ascending: everything
+        but the ``retain`` largest — one :func:`repro.core.ordered.
+        top_k` walk finds the horizon, one tower-descended range walk
+        collects the victims.  The ordered analogue of the request
+        log's insertion-order window (identical for monotone keys)."""
+        n_live = len(self._members)
+        n_evict = n_live - retain
+        if n_evict <= 0:
+            return []
+        cnt, tk, _ = self._ord.top_k(self.state, retain + 1)
+        if int(cnt) <= retain:               # fewer live than retain+1
+            return []
+        # tk is ascending: tk[0] is the (retain+1)-th largest stored
+        # key — the largest member that must be evicted (inclusive)
+        horizon = int(np.asarray(tk)[0])
+        return self.range_members(self._ord.KEY_MIN, horizon - 1,
+                                  n_evict)
+
+
 def live_step_index(manifests, keep_files: Iterable[str],
                     idx: Optional[MembershipIndex] = None
                     ) -> MembershipIndex:

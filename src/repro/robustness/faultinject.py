@@ -23,15 +23,18 @@ eviction-mode and runs the scenario's recovery checks after each crash:
 equivalence** (an independent host-side replay of the durable bytes
 matches the recovered object).
 
-Five scenarios cover the durable layers (the :data:`SCENARIOS`
+Six scenarios cover the durable layers (the :data:`SCENARIOS`
 registry): the serving :class:`~repro.serving.engine.RequestLog`
 (commit/evict/snapshot/truncate), two such logs *live concurrently* on
 one dir (``log2`` — interleaved commits, recovery metrics checked
 against the durable bytes), the
 :class:`~repro.persistence.checkpoint.CheckpointManager` (save/gc), the
-:class:`~repro.core.migrate.MigratingMap` migration window and the
-:class:`~repro.core.rebalance.RebalancingShardedMap` rebalance window.
-``tools/crash_sweep.py`` is the CLI over the same machinery.
+:class:`~repro.core.migrate.MigratingMap` migration window, the
+:class:`~repro.core.rebalance.RebalancingShardedMap` rebalance window,
+and the :class:`~repro.core.ordered.DurableOrderedMap` batch journal
+(``ordered`` — sorted-prefix durability plus volatile-tower-rebuild
+identity).  ``tools/crash_sweep.py`` is the CLI over the same
+machinery.
 
 >>> s = CrashSite(3, "publish", "mig_0001/state.json")
 >>> s.index, s.kind
@@ -624,12 +627,180 @@ class RebalanceScenario:
                 "finishing the recovered rebalance changed content"
 
 
+class OrderedScenario:
+    """The batch-parallel durable *ordered* map
+    (:class:`~repro.core.ordered.DurableOrderedMap`): mixed
+    insert/delete batches with duplicate keys journaled round-by-round
+    (write → flush → fence → publish), a mid-schedule snapshot +
+    round/snapshot trims, then recovery checked four ways:
+
+      * **oracle equivalence** — an independent host-side replay of the
+        durable bytes (newest whole snapshot walked as a raw chain +
+        surviving whole rounds through the same dict model as
+        :func:`_replay_rounds`) equals the recovered map's content;
+      * **no acked batch lost** — every ``update()`` that returned has
+        its round durable with the exact issued payload (rounds publish
+        before the engine applies, so acked == durable exactly under
+        crash-before semantics), and surviving rounds are a contiguous
+        suffix from the snapshot horizon;
+      * **sorted-prefix durability** — the recovered bottom list is
+        strictly ascending, cycle-free, and threads every allocated
+        node (:func:`repro.core.ordered.check_sorted`);
+      * **tower-rebuild identity** — the volatile index rebuilt from
+        the recovered bottom list is *bit-identical* to an independent
+        expectation built per-key from the seed skiplist's scalar
+        :func:`repro.core.skiplist.tower_height`, and the recovered
+        state arrays equal a fresh in-memory engine replaying the
+        durable rounds (Property 2, mechanically).
+    """
+
+    layer = "ordered"
+    N_BATCHES = 6
+    CAPACITY = 96
+    SNAP_AFTER = 3          # snapshot()+trim after the 4th batch
+
+    def __init__(self, root, plan: CrashPlan):
+        self.root = Path(root)
+        self.plan = plan
+        self.issued: List[dict] = []     # every update() attempted
+        self.acked: List[dict] = []      # update() returned
+
+    @staticmethod
+    def _batch(b: int):
+        """Deterministic mixed batch ``b``: clustered keys (duplicate
+        key groups and shared predecessors on purpose), a few deletes
+        of earlier keys, every batch a different size."""
+        rng = np.random.default_rng(4242 + b)
+        n = 6 + b * 2
+        ops = rng.integers(0, 2, n).astype(np.int32)
+        ks = rng.integers(0, 24, n).astype(np.int32)
+        vs = (100 * b + np.arange(n)).astype(np.int32)
+        return ops, ks, vs
+
+    def run(self) -> None:
+        from ..core.ordered import DurableOrderedMap
+        m = DurableOrderedMap(self.root, capacity=self.CAPACITY)
+        self.plan.attach(m.io)
+        for b in range(self.N_BATCHES):
+            ops, ks, vs = self._batch(b)
+            rec = {"ops": ops.tolist(), "ks": ks.tolist(),
+                   "vs": vs.tolist()}
+            self.issued.append(rec)
+            m.update(ops, ks, vs)
+            self.acked.append(rec)
+            if b == self.SNAP_AFTER:
+                m.snapshot()
+
+    # -- independent durable-bytes oracle ------------------------------ #
+    def _disk_rounds(self) -> Tuple[Optional[dict], List[dict]]:
+        """(newest whole snapshot payload or None, whole rounds at/past
+        its horizon in index order) — raw file parsing only."""
+        snap = None
+        horizon = 0
+        for p in sorted(self.root.glob("osnap_*.json"), reverse=True):
+            try:
+                snap = json.loads(p.read_text())
+                horizon = int(snap["horizon"])
+                break
+            except (json.JSONDecodeError, KeyError, ValueError):
+                continue             # torn snapshot: older one wins
+        rounds = []
+        for p in sorted(self.root.glob("ord_*.json")):
+            try:
+                idx = int(p.name[4:-5])
+            except ValueError:
+                continue
+            if idx < horizon:
+                continue             # covered by snapshot (trim raced)
+            try:
+                rounds.append((idx, json.loads(p.read_text())))
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                continue             # torn round: never published whole
+        return snap, [r for _, r in sorted(rounds)]
+
+    @staticmethod
+    def _walk_snapshot(snap: dict) -> dict:
+        """Raw chain walk of a snapshot's arrays: {key: (live, val)}."""
+        out: dict = {}
+        node = int(snap["nxt"][0])
+        hops = 0
+        while node != -1:
+            out[int(snap["key"][node])] = (bool(snap["live"][node]),
+                                           int(snap["val"][node]))
+            node = int(snap["nxt"][node])
+            hops += 1
+            assert hops <= len(snap["key"]), "cycle in snapshot chain"
+        return out
+
+    def check(self) -> None:
+        from ..core.ordered import (DurableOrderedMap, build_towers,
+                                    check_sorted, make_ordered,
+                                    update_parallel_ordered)
+        from ..core.skiplist import tower_height
+
+        snap, rounds = self._disk_rounds()
+        # no acked batch lost: rounds publish before the engine applies
+        # and crash-before semantics never half-execute a publish, so
+        # the durable stream is exactly the acked stream
+        horizon = int(snap["horizon"]) if snap else 0
+        n_durable = horizon + len(rounds)
+        assert n_durable == len(self.acked), \
+            f"{len(self.acked)} batches acked, {n_durable} durable"
+        for rec, want in zip(rounds, self.issued[horizon:]):
+            assert rec == want, "durable round payload differs from issued"
+
+        m2 = DurableOrderedMap(self.root, capacity=self.CAPACITY)
+        # oracle equivalence: snapshot walk + dict-model round replay
+        items = self._walk_snapshot(snap) if snap else {}
+        _replay_rounds(items, rounds)
+        assert m2.items() == items, \
+            "recovered content diverges from the durable-bytes oracle"
+        # sorted-prefix durability
+        check_sorted(m2.state)
+        # engine bit-identity: a fresh in-memory engine replaying the
+        # durable stream reproduces the recovered arrays exactly
+        st = make_ordered(self.CAPACITY)
+        for rec in (self.issued[:horizon] + rounds):
+            st, _, _ = update_parallel_ordered(
+                st, np.asarray(rec["ops"], np.int32),
+                np.asarray(rec["ks"], np.int32),
+                np.asarray(rec["vs"], np.int32))
+        for f in st._fields:
+            assert np.array_equal(np.asarray(getattr(st, f)),
+                                  np.asarray(getattr(m2.state, f))), \
+                f"recovered state field {f} not bit-identical to replay"
+        # tower-rebuild identity vs the scalar seed promotion
+        tw = build_towers(m2.state, m2.max_level)
+        ks = np.asarray(m2.state.key)
+        live = np.asarray(m2.state.live)
+        by_level: Dict[int, list] = {l: [] for l in
+                                     range(2, m2.max_level + 1)}
+        for nid in np.nonzero(live)[0]:
+            for l in range(2, tower_height(int(ks[nid]),
+                                           m2.max_level) + 1):
+                by_level[l].append((int(ks[nid]), int(nid)))
+        for l in range(2, m2.max_level + 1):
+            want = sorted(by_level[l])
+            row_k = np.asarray(tw.keys[l - 2])
+            row_a = np.asarray(tw.addr[l - 2])
+            got = [(int(row_k[i]), int(row_a[i]))
+                   for i in range(len(want))]
+            assert got == want, f"tower level {l} diverges from scalar"
+            assert (row_k[len(want):] == 2 ** 31 - 1).all(), \
+                f"tower level {l} padding corrupt"
+        # and the rebuild is idempotent (same state -> same towers)
+        tw2 = build_towers(m2.state, m2.max_level)
+        assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(tw, tw2)), "tower rebuild not stable"
+
+
 SCENARIOS = {
     "log": RequestLogScenario,
     "log2": ConcurrentLogScenario,
     "checkpoint": CheckpointScenario,
     "migrate": MigrateScenario,
     "rebalance": RebalanceScenario,
+    "ordered": OrderedScenario,
 }
 
 

@@ -63,6 +63,7 @@ class RequestLog:
 
     def __init__(self, root, seed: int = 0, capacity: int = 1 << 15,
                  shards: Optional[int] = None, rebalance: bool = False,
+                 ordered_dedup: bool = False,
                  registry=None, tracer: Optional[Tracer] = None,
                  timeline=None, obs: bool = True):
         """``shards`` (optional) backs the dedup index with the
@@ -78,6 +79,17 @@ class RequestLog:
         shard boundaries under live traffic via
         :class:`repro.core.rebalance.RebalancingShardedMap`
         (:attr:`dedup_rebalances` counts completions).
+
+        ``ordered_dedup`` instead backs the index with the
+        batch-parallel *ordered* engine
+        (:class:`repro.persistence.index.OrderedMembershipIndex` over
+        :mod:`repro.core.ordered`): committed rids live in a sorted
+        bottom-level list under volatile towers, and
+        :meth:`expired_rids` becomes an ordered-by-rid horizon trim
+        (one top-k walk + one tower-descended range scan) instead of
+        the insertion-order window — identical semantics for the
+        monotone rid streams the engine issues.  Mutually exclusive
+        with ``shards`` (the ordered pool is single-device).
 
         ``registry``/``tracer`` plug the log into an explicit NVTrace
         metrics registry and span tracer (default: the process-wide
@@ -99,9 +111,16 @@ class RequestLog:
             PersistListener(tracer=self.tracer,
                             registry=self.metrics).attach(self.io)
         self._rng = random.Random(0x5eed ^ seed)
-        self._dedup = MembershipIndex(capacity, n_buckets=256,
-                                      n_shards=shards,
-                                      auto_rebalance=rebalance)
+        self._ordered = bool(ordered_dedup)
+        if ordered_dedup:
+            assert shards is None, \
+                "ordered_dedup is single-device (no shards)"
+            from ..persistence.index import OrderedMembershipIndex
+            self._dedup = OrderedMembershipIndex(capacity)
+        else:
+            self._dedup = MembershipIndex(capacity, n_buckets=256,
+                                          n_shards=shards,
+                                          auto_rebalance=rebalance)
         self._folded: set = set()  # log filenames already in the index
         self._torn: dict = {}      # torn filename -> (size, mtime_ns) seen
         self._results: Dict[int, list] = {}   # rid -> committed result
@@ -464,7 +483,13 @@ class RequestLog:
     def expired_rids(self, retain: int) -> List[int]:
         """Rids past the newest ``retain`` committed ones, in commit
         order (restart replays records in slot order, so the retention
-        horizon survives recovery)."""
+        horizon survives recovery).  In ``ordered_dedup`` mode the
+        window is ordered-by-rid instead: the sorted bottom list
+        answers with one top-k walk + one tower-descended range scan
+        (:meth:`repro.persistence.index.OrderedMembershipIndex.
+        expired`) — the same rids for the engine's monotone streams."""
+        if self._ordered:
+            return [int(r) for r in self._dedup.expired(max(retain, 0))]
         done = list(self._results)
         if retain <= 0:
             return done
@@ -586,6 +611,7 @@ class ServeEngine:
                  batch_size: int = 4, retain: Optional[int] = None,
                  log_shards: Optional[int] = None,
                  log_rebalance: bool = False,
+                 ordered_dedup: bool = False,
                  snapshot_every: Optional[int] = None,
                  registry=None, timeline=None, obs: bool = True):
         """``retain`` bounds the exactly-once window: when set, each
@@ -596,7 +622,10 @@ class ServeEngine:
         bucket-range-sharded backend (multi-device deployments);
         ``log_rebalance`` further lets it re-split its shard boundaries
         under live traffic when the rid stream skews (see
-        :class:`repro.core.rebalance.RebalancingShardedMap`).
+        :class:`repro.core.rebalance.RebalancingShardedMap`);
+        ``ordered_dedup`` instead runs the dedup index on the ordered
+        engine so retention eviction is an ordered-by-rid horizon trim
+        (see :class:`RequestLog`).
         ``snapshot_every`` publishes a truncating
         :meth:`RequestLog.snapshot` after that many commits, keeping a
         restart O(retention window) instead of O(served history).
@@ -614,6 +643,7 @@ class ServeEngine:
         self._commits_since_snap = 0
         self.log = RequestLog(log_dir, shards=log_shards,
                               rebalance=log_rebalance,
+                              ordered_dedup=ordered_dedup,
                               registry=registry, timeline=timeline,
                               obs=obs)
         self.metrics = self.log.metrics

@@ -153,6 +153,39 @@ def test_skiplist_index_rebuild_deterministic():
     assert {l: list(v) for l, v in ds.index.items()} == before
 
 
+def test_skiplist_crash_rebuild_towers_identical_to_scalar():
+    """Crash mid-schedule under the Interleaver, recover, and rebuild:
+    the towers must equal an independent per-key ``tower_height``
+    expectation over the recovered live set — the same identity the
+    batch engine's ``build_towers`` guarantees (Property 2: index
+    reconstruction is deterministic in the bottom list alone)."""
+    from repro.core.skiplist import tower_height
+    for seed, crash_at in [(0, 12), (1, 40), (2, 120)]:
+        rng = np.random.default_rng(seed)
+        mem = PMem(1 << 17, seed=seed)
+        ds = SkipList(mem, max_level=6)
+        _fill(ds, range(0, 24, 3))
+        mem.persist_all()
+        ops = []
+        for _ in range(14):
+            op = rng.choice(["insert", "delete"])
+            k = int(rng.integers(0, 24))
+            ops.append((op, (k, k * 5) if op == "insert" else (k,)))
+        il = Interleaver(ds, get_policy("nvtraverse"), ops, seed=seed)
+        il.run(crash_at=crash_at, evict="random")
+        ds.index = {}                     # towers die with the crash
+        ds.disconnect()                   # recovery (rebuilds the index)
+        snapshot = ds.sorted_snapshot()   # one bottom-level walk
+        assert [k for k, _ in snapshot] == sorted(ds.contents())
+        want = {l: [(k, a) for k, a in snapshot
+                    if tower_height(k, 6) >= l]
+                for l in range(2, 7)}
+        assert ds.index == want, f"seed {seed}: rebuilt towers diverge"
+        # and the rebuild is a fixed point
+        ds.rebuild_index()
+        assert ds.index == want
+
+
 def test_skiplist_index_is_volatile_auxiliary():
     """Crash wipes the towers; recovery rebuilds them; contents survive."""
     mem = PMem(1 << 17)

@@ -1,0 +1,558 @@
+"""OrderedNVT differential + crash-replay test layer.
+
+Three oracles pin the ordered engine down:
+
+  * the **sequential scan oracle** :func:`repro.core.ordered.
+    apply_ordered` — the plan/commit engine must be *bit-identical* to
+    it (state arrays including node-id allocation order and chain
+    links, per-op ok flags, flush/fence accounting);
+  * the **pure-dict oracle** (:func:`repro.core.ordered.oracle_apply` /
+    ``oracle_range`` — dict + ``sorted``, zero engine code) for
+    content, range queries, and top-k;
+  * the **durable-bytes oracle** of the ``ordered`` crash scenario —
+    crash-at-every-site recovery must replay to the exact acked prefix
+    with bit-identical volatile-tower rebuild.
+
+Plus the seed linearizability harness lifted to the engine level: batch
+executions mapped to concurrent :class:`~repro.core.scheduler.OpRecord`
+histories checked with :func:`~repro.core.linearizability.
+check_linearizable` / ``check_durably_linearizable``.
+"""
+import json
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ordered as O
+from repro.core.batched import OP_DELETE, OP_INSERT
+from repro.core.ordered import (DurableOrderedMap, apply_ordered,
+                                build_towers, check_sorted, items_host,
+                                live_items, lookup_ordered, make_ordered,
+                                oracle_apply, oracle_range, range_query,
+                                scan, top_k, update_parallel_ordered)
+
+
+def assert_states_equal(a: O.OrderedState, b: O.OrderedState, ctx=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f} diverged")
+
+
+def random_batch(rng, n, key_hi=40, val_hi=1000):
+    return (rng.integers(0, 2, n).astype(np.int32),
+            rng.integers(0, key_hi, n).astype(np.int32),
+            rng.integers(0, val_hi, n).astype(np.int32))
+
+
+# --------------------------------------------------------------------- #
+# bit-identity: parallel engine vs sequential scan vs pure-dict oracle   #
+# --------------------------------------------------------------------- #
+def test_mixed_rounds_bit_identical_to_scan_and_dict_oracle():
+    rng = np.random.default_rng(11)
+    for trial in range(4):
+        cap = int(rng.integers(48, 256))
+        st_p, st_s, model = make_ordered(cap), make_ordered(cap), {}
+        for rnd in range(8):
+            ops, ks, vs = random_batch(rng, int(rng.integers(1, 40)))
+            st_p, ok_p, stats = update_parallel_ordered(st_p, ops, ks, vs)
+            st_s, ok_s = apply_ordered(st_s, jnp.asarray(ops),
+                                       jnp.asarray(ks), jnp.asarray(vs))
+            ok_m = oracle_apply(model, ops, ks, vs, capacity=cap)
+            np.testing.assert_array_equal(np.asarray(ok_p),
+                                          np.asarray(ok_s))
+            np.testing.assert_array_equal(np.asarray(ok_p),
+                                          np.asarray(ok_m, bool))
+            assert_states_equal(st_p, st_s, f"trial {trial} round {rnd}")
+            assert items_host(st_p) == model
+            check_sorted(st_p)
+        # accounting tracked the oracle the whole way
+        assert int(st_p.flushes) == int(st_s.flushes)
+        assert int(st_p.fences) == int(st_s.fences)
+
+
+def test_duplicate_key_groups_compose_liveness_in_batch_order():
+    """Heavy duplicate-key batches: the whole group's outcome is the
+    batch-order composition (insert iff dead, delete iff live), seeded
+    by the snapshot — exactly the scan."""
+    rng = np.random.default_rng(23)
+    st_p, st_s, model = make_ordered(64), make_ordered(64), {}
+    for rnd in range(10):
+        # 3 distinct keys, 24 ops: ~8 ops per duplicate group
+        ops, ks, vs = random_batch(rng, 24, key_hi=3)
+        st_p, ok_p, _ = update_parallel_ordered(st_p, ops, ks, vs)
+        st_s, ok_s = apply_ordered(st_s, jnp.asarray(ops),
+                                   jnp.asarray(ks), jnp.asarray(vs))
+        ok_m = oracle_apply(model, ops, ks, vs, capacity=64)
+        np.testing.assert_array_equal(np.asarray(ok_p), np.asarray(ok_s))
+        np.testing.assert_array_equal(np.asarray(ok_p),
+                                      np.asarray(ok_m, bool))
+        assert_states_equal(st_p, st_s, f"round {rnd}")
+
+
+def test_capacity_failure_kills_whole_group_cleanly():
+    """A fresh insert that does not fit fails its entire duplicate-key
+    group (no partial liveness composition) and leaves accounting and
+    chain untouched — same as the scan hitting the full pool."""
+    cap = 6          # sentinel + 5 nodes
+    st_p, st_s = make_ordered(cap), make_ordered(cap)
+    ks0 = np.asarray([10, 20, 30, 40], np.int32)
+    st_p, ok, _ = update_parallel_ordered(
+        st_p, np.zeros(4, np.int32), ks0, ks0)
+    st_s, _ = apply_ordered(st_s, jnp.zeros(4, jnp.int32),
+                            jnp.asarray(ks0), jnp.asarray(ks0))
+    assert np.asarray(ok).all()
+    # 1 free slot; two fresh keys + a delete-then-insert group on 50
+    ops = np.asarray([OP_INSERT, OP_INSERT, OP_DELETE, OP_INSERT],
+                     np.int32)
+    ks = np.asarray([50, 60, 50, 50], np.int32)
+    vs = np.asarray([1, 2, 0, 3], np.int32)
+    st_p, ok_p, _ = update_parallel_ordered(st_p, ops, ks, vs)
+    st_s, ok_s = apply_ordered(st_s, jnp.asarray(ops), jnp.asarray(ks),
+                               jnp.asarray(vs))
+    np.testing.assert_array_equal(np.asarray(ok_p), np.asarray(ok_s))
+    assert_states_equal(st_p, st_s, "capacity group-kill")
+    # 50 allocated (first in batch order), 60 failed cleanly
+    assert live_items(st_p) == {10: 10, 20: 20, 30: 30, 40: 40, 50: 3}
+    check_sorted(st_p)
+
+
+def test_conflict_stats_follow_pred_group_law():
+    """coalesced_fences = 2 × the largest same-predecessor group; fresh
+    nodes splicing one gap share a group."""
+    st = make_ordered(128)
+    st, ok, _ = update_parallel_ordered(
+        st, np.zeros(2, np.int32), np.asarray([0, 100], np.int32),
+        np.asarray([0, 100], np.int32))
+    # 6 fresh keys between 0 and 100: all share predecessor node(0)
+    ks = np.asarray([10, 20, 30, 40, 50, 60], np.int32)
+    st2, ok, stats = update_parallel_ordered(
+        st, np.zeros(6, np.int32), ks, ks)
+    assert np.asarray(ok).all()
+    assert int(stats.ops_committed) == 6
+    assert int(stats.conflict_groups) == 1
+    assert int(stats.max_group) == 6
+    assert int(stats.coalesced_fences) == 2 * 6
+    # spread across distinct predecessors: groups of 1
+    ks2 = np.asarray([5, 15, 25, 35], np.int32)
+    _, ok, stats = update_parallel_ordered(st2, np.zeros(4, np.int32),
+                                           ks2, ks2)
+    assert np.asarray(ok).all()
+    assert int(stats.conflict_groups) == 4
+    assert int(stats.max_group) == 1
+    assert int(stats.coalesced_fences) == 2
+
+
+def test_accounting_law_fresh_two_resurrect_one():
+    st = make_ordered(64)
+    ks = np.arange(1, 11, dtype=np.int32)
+    st, _, _ = update_parallel_ordered(st, np.zeros(10, np.int32), ks, ks)
+    assert int(st.flushes) == 20 and int(st.fences) == 20
+    st, _, _ = update_parallel_ordered(st, np.ones(10, np.int32), ks, ks)
+    assert int(st.flushes) == 30 and int(st.fences) == 40     # delete: 1
+    st, _, _ = update_parallel_ordered(st, np.zeros(10, np.int32), ks, ks)
+    assert int(st.flushes) == 40 and int(st.fences) == 60     # resurrect: 1
+
+
+# --------------------------------------------------------------------- #
+# property-based op streams (hypothesis when available; the seeded       #
+# fallback below always runs the same property)                          #
+# --------------------------------------------------------------------- #
+def _check_stream_property(batches, cap):
+    """The property: arbitrary mixed batches stay bit-identical to the
+    scan oracle and the dict oracle, the chain stays sorted, and a
+    random range query matches the sorted-dict answer."""
+    st_p, st_s, model = make_ordered(cap), make_ordered(cap), {}
+    for b in batches:
+        ops = np.asarray([o for o, _, _ in b], np.int32)
+        ks = np.asarray([k for _, k, _ in b], np.int32)
+        vs = np.asarray([v for _, _, v in b], np.int32)
+        st_p, ok_p, _ = update_parallel_ordered(st_p, ops, ks, vs)
+        st_s, ok_s = apply_ordered(st_s, jnp.asarray(ops),
+                                   jnp.asarray(ks), jnp.asarray(vs))
+        ok_m = oracle_apply(model, ops, ks, vs, capacity=cap)
+        np.testing.assert_array_equal(np.asarray(ok_p), np.asarray(ok_s))
+        np.testing.assert_array_equal(np.asarray(ok_p),
+                                      np.asarray(ok_m, bool))
+        assert_states_equal(st_p, st_s)
+        assert items_host(st_p) == model
+        check_sorted(st_p)
+    return st_p, model
+
+
+def test_property_streams_bit_identical_seeded():
+    """Seeded generator over the same space the hypothesis test draws
+    from — runs in every environment (hypothesis is an optional dep)."""
+    rng = np.random.default_rng(1234)
+    for _ in range(12):
+        cap = int(rng.integers(4, 48))
+        batches = [[(int(rng.integers(0, 2)), int(rng.integers(0, 26)),
+                     int(rng.integers(0, 100)))
+                    for _ in range(int(rng.integers(1, 60)))]
+                   for _ in range(int(rng.integers(1, 5)))]
+        st_p, model = _check_stream_property(batches, cap)
+        lo = int(rng.integers(-2, 27))
+        hi = int(rng.integers(lo, 29))
+        total, rk, rv = range_query(st_p, lo, hi, 64)
+        want = oracle_range(model, lo, hi)
+        assert int(total) == len(want)
+        assert list(zip(np.asarray(rk)[:len(want)].tolist(),
+                        np.asarray(rv)[:len(want)].tolist())) == want
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    SETTINGS = settings(max_examples=20, deadline=None,
+                        suppress_health_check=[HealthCheck.too_slow])
+    op_stream = st.lists(
+        st.tuples(st.integers(0, 1), st.integers(0, 25),
+                  st.integers(0, 99)),
+        min_size=1, max_size=60)
+
+    @SETTINGS
+    @given(st.lists(op_stream, min_size=1, max_size=4),
+           st.integers(4, 48))
+    def test_hypothesis_streams_bit_identical(batches, cap):
+        _check_stream_property(batches, cap)
+except ImportError:          # pragma: no cover - optional dependency
+    pass
+
+
+# --------------------------------------------------------------------- #
+# ordered reads: towers, range, scan, top-k                              #
+# --------------------------------------------------------------------- #
+def _grown_state(rng, cap=512, rounds=6):
+    stt, model = make_ordered(cap), {}
+    for _ in range(rounds):
+        ops, ks, vs = random_batch(rng, 64, key_hi=200)
+        stt, _, _ = update_parallel_ordered(stt, ops, ks, vs)
+        oracle_apply(model, ops, ks, vs, capacity=cap)
+    return stt, model
+
+
+def test_tower_rebuild_identity_and_lookup_equivalence():
+    """Property 2, mechanically: towers rebuilt from the bottom list
+    match an independent per-key scalar tower_height expectation, the
+    rebuild is idempotent, and descending them changes no answer."""
+    from repro.core.skiplist import tower_height
+    rng = np.random.default_rng(5)
+    stt, model = _grown_state(rng)
+    tw = build_towers(stt)
+    # independent expectation from the seed skiplist's scalar promotion
+    ks_arr, live = np.asarray(stt.key), np.asarray(stt.live)
+    for lvl in range(2, O.MAX_LEVEL + 1):
+        want = sorted((int(ks_arr[n]), int(n))
+                      for n in np.nonzero(live)[0]
+                      if tower_height(int(ks_arr[n]), O.MAX_LEVEL) >= lvl)
+        row_k = np.asarray(tw.keys[lvl - 2])
+        row_a = np.asarray(tw.addr[lvl - 2])
+        assert [(int(row_k[i]), int(row_a[i]))
+                for i in range(len(want))] == want
+        assert (row_k[len(want):] == O.KEY_PAD).all()
+    tw2 = build_towers(stt)
+    for a, b in zip(tw, tw2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # lookups with towers == without (the index is only a shortcut)
+    probe = jnp.asarray(rng.integers(0, 220, 64), jnp.int32)
+    f1, v1 = lookup_ordered(stt, probe, tw)
+    f2, v2 = lookup_ordered(stt, probe, None)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    for i, k in enumerate(np.asarray(probe)):
+        lv, v = model.get(int(k), (False, 0))
+        assert bool(np.asarray(f1)[i]) == lv
+        if lv:
+            assert int(np.asarray(v1)[i]) == v
+
+
+def test_range_query_zipf_matches_sorted_dict_oracle():
+    """Seeded zipf key stream (skewed duplicates), then a sweep of
+    range shapes vs the pure sorted-dict oracle — including truncation
+    and with/without towers."""
+    rng = np.random.default_rng(42)
+    stt, model = make_ordered(1024), {}
+    for _ in range(6):
+        n = 96
+        ks = (rng.zipf(1.3, n) % 500).astype(np.int32)
+        ops = rng.integers(0, 2, n).astype(np.int32)
+        vs = rng.integers(0, 10_000, n).astype(np.int32)
+        stt, _, _ = update_parallel_ordered(stt, ops, ks, vs)
+        oracle_apply(model, ops, ks, vs, capacity=1024)
+    tw = build_towers(stt)
+    for lo, hi in [(0, 499), (10, 20), (100, 300), (450, 600),
+                   (7, 7), (300, 100)]:
+        want = oracle_range(model, lo, hi)
+        for towers in (tw, None):
+            total, rk, rv = range_query(stt, lo, hi, 600, towers)
+            assert int(total) == len(want)
+            assert list(zip(np.asarray(rk)[:len(want)].tolist(),
+                            np.asarray(rv)[:len(want)].tolist())) == want
+    # truncation: max_items smaller than the hit count
+    want = oracle_range(model, 0, 499)
+    total, rk, rv = range_query(stt, 0, 499, 5, tw)
+    assert int(total) == len(want)
+    assert list(zip(np.asarray(rk)[:5].tolist(),
+                    np.asarray(rv)[:5].tolist())) == want[:5]
+
+
+def test_scan_and_top_k_match_oracle():
+    rng = np.random.default_rng(9)
+    stt, model = _grown_state(rng)
+    alive = sorted((k, v) for k, v in live_items(stt).items())
+    assert alive == sorted(
+        (k, v) for k, (lv, v) in model.items() if lv)
+    total, sk, sv = scan(stt, 512)
+    assert int(total) == len(alive)
+    assert list(zip(np.asarray(sk)[:len(alive)].tolist(),
+                    np.asarray(sv)[:len(alive)].tolist())) == alive
+    for k in (1, 3, 17, len(alive), len(alive) + 10):
+        cnt, tk, tv = top_k(stt, k)
+        want = alive[-k:]
+        assert int(cnt) == len(want)
+        assert list(zip(np.asarray(tk)[:len(want)].tolist(),
+                        np.asarray(tv)[:len(want)].tolist())) == want
+
+
+# --------------------------------------------------------------------- #
+# durable wrapper: journal round-trip + crash replay                     #
+# --------------------------------------------------------------------- #
+def test_durable_map_recovery_bit_identical():
+    rng = np.random.default_rng(3)
+    with tempfile.TemporaryDirectory() as d:
+        m = DurableOrderedMap(d, capacity=128)
+        model = {}
+        for b in range(7):
+            ops, ks, vs = random_batch(rng, int(rng.integers(1, 20)))
+            m.update(ops, ks, vs)
+            oracle_apply(model, ops, ks, vs, capacity=128)
+            if b == 3:
+                m.snapshot()
+        assert m.items() == model
+        m2 = DurableOrderedMap(d, capacity=128)
+        assert_states_equal(m.state, m2.state, "recovery")
+        for a, b_ in zip(m.towers, m2.towers):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        assert m2._n == m._n
+        check_sorted(m2.state)
+        total, rk, rv = m2.range(0, 39, 64)
+        want = oracle_range(model, 0, 39)
+        assert total == len(want)
+        assert list(zip(rk.tolist(), rv.tolist())) == want
+
+
+def test_ordered_crash_scenario_sampled_sites():
+    """Crash-at-site recovery through the faultinject scenario (the
+    full 25-site × 3-eviction sweep runs in the CI faultinject lane;
+    tier-1 samples a site budget across all three adversaries)."""
+    from repro.robustness.faultinject import OrderedScenario, sweep
+    rep = sweep(OrderedScenario, budget=7,
+                evict_modes=("none", "random", "torn"))
+    assert rep["failures"] == [], rep["failures"]
+    assert rep["n_sites"] > 0
+    kinds = {s["kind"] for s in rep["sites"]}
+    assert kinds == {"flush", "fence", "publish", "trim"}
+
+
+def test_torn_round_never_acked_and_prefix_replayed():
+    """A round file torn mid-stage is never acknowledged; recovery
+    replays exactly the published prefix."""
+    rng = np.random.default_rng(8)
+    with tempfile.TemporaryDirectory() as d:
+        m = DurableOrderedMap(d, capacity=64)
+        for _ in range(3):
+            ops, ks, vs = random_batch(rng, 8)
+            m.update(ops, ks, vs)
+        acked = m.items()
+        # stage a 4th round but crash before publish: torn staging
+        m.io.write("ord.tmp", b'{"ops": [0], "ks": [5]')   # torn payload
+        m.io.crash(evict="all")
+        m2 = DurableOrderedMap(d, capacity=64)
+        assert m2.items() == acked
+        assert m2._n == 3
+        check_sorted(m2.state)
+
+
+# --------------------------------------------------------------------- #
+# serving consumer: ordered_dedup retention trim                         #
+# --------------------------------------------------------------------- #
+def test_request_log_ordered_dedup_equivalent_and_restartable():
+    from repro.serving.engine import RequestLog
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        a = RequestLog(root / "hash", capacity=256)
+        b = RequestLog(root / "ord", capacity=256, ordered_dedup=True)
+        retain = 5
+        rid = 0
+        for batch in range(7):
+            rec = {rid + i: [batch, i] for i in range(3)}
+            rid += 3
+            ea, eb = a.expired_rids(retain), b.expired_rids(retain)
+            assert sorted(ea) == eb          # ordered trim is ascending
+            a.commit(rec, evict=ea)
+            b.commit(rec, evict=eb)
+            assert a.committed() == b.committed()
+            rids = list(range(rid))
+            np.testing.assert_array_equal(a.took_effect(rids),
+                                          b.took_effect(rids))
+            if batch == 3:
+                a.snapshot()
+                b.snapshot()
+        assert b.dedup_migrations == b._dedup.migrations
+        # restart: ordered mode recovers through the same snapshot +
+        # suffix replay and answers identically
+        a2 = RequestLog(root / "hash", capacity=256)
+        b2 = RequestLog(root / "ord", capacity=256, ordered_dedup=True)
+        assert a2.committed() == b2.committed() == a.committed()
+        assert sorted(a2.expired_rids(2)) == b2.expired_rids(2)
+        np.testing.assert_array_equal(a2.took_effect(list(range(rid))),
+                                      b2.took_effect(list(range(rid))))
+
+
+def test_ordered_membership_index_expired_window():
+    from repro.persistence.index import OrderedMembershipIndex
+    idx = OrderedMembershipIndex(capacity=8)   # forces growth too
+    idx.update(add_keys=range(0, 40, 2))
+    assert idx.expired(5) == list(range(0, 30, 2))
+    assert idx.expired(100) == []
+    assert idx.expired(0) == list(range(0, 40, 2))
+    idx.update(remove_keys=[0, 2, 4])
+    assert idx.expired(5) == list(range(6, 30, 2))
+    assert idx.range_members(10, 20, 50) == [10, 12, 14, 16, 18, 20]
+    assert idx.migrations >= 1
+
+
+# --------------------------------------------------------------------- #
+# engine-level linearizability (the revived seed harness)                #
+# --------------------------------------------------------------------- #
+def _batch_records(batches, oks, crashed_batch=None):
+    """Map batch executions onto concurrent OpRecord histories: ops of
+    batch b are concurrent with each other (invoke 2b, respond 2b+1),
+    batches are real-time ordered; a crashed batch's ops stay pending."""
+    from repro.core.scheduler import OpRecord
+    records, opid = [], 0
+    for bi, (ops, ks, _vs) in enumerate(batches):
+        crashed = crashed_batch is not None and bi >= crashed_batch
+        for i in range(len(ks)):
+            name = "insert" if int(ops[i]) == OP_INSERT else "delete"
+            records.append(OpRecord(
+                opid=opid, op=name, args=(int(ks[i]),),
+                invoke_step=2 * bi,
+                respond_step=None if crashed else 2 * bi + 1,
+                result=None if crashed else bool(oks[bi][i])))
+            opid += 1
+    return records
+
+
+def test_engine_batches_linearizable():
+    from repro.core.linearizability import check_linearizable
+    rng = np.random.default_rng(31)
+    stt = make_ordered(256)
+    batches, oks = [], []
+    for _ in range(5):
+        ops, ks, vs = random_batch(rng, 12, key_hi=10)
+        stt, ok, _ = update_parallel_ordered(stt, ops, ks, vs)
+        batches.append((ops, ks, vs))
+        oks.append(np.asarray(ok))
+    assert check_linearizable(_batch_records(batches, oks))
+
+
+def test_engine_crash_prefix_durably_linearizable():
+    """Crash after every batch boundary of a durable run: the recovered
+    live set must durably linearize the full history with the suffix
+    pending (all-or-nothing per batch — the journal replays a strict
+    round prefix)."""
+    from repro.core.linearizability import check_durably_linearizable
+    rng = np.random.default_rng(37)
+    with tempfile.TemporaryDirectory() as d:
+        m = DurableOrderedMap(d, capacity=256)
+        batches, oks = [], []
+        for _ in range(4):
+            ops, ks, vs = random_batch(rng, 8, key_hi=12)
+            ok = m.update(ops, ks, vs)
+            batches.append((ops, ks, vs))
+            oks.append(ok)
+        # simulate recovery from every durable prefix: replay the first
+        # c rounds (the journal's only crash outcomes) and check
+        for c in range(len(batches) + 1):
+            stt = make_ordered(256)
+            for ops, ks, vs in batches[:c]:
+                stt, _, _ = update_parallel_ordered(stt, ops, ks, vs)
+            recovered = set(live_items(stt))
+            assert check_durably_linearizable(
+                _batch_records(batches, oks, crashed_batch=c),
+                recovered_keys=recovered), f"prefix {c} not durable-lin"
+
+
+def test_seed_skiplist_rebuild_matches_engine_towers():
+    """Bridge: the seed SkipList's recovery rebuild and the batch
+    engine's build_towers promote the *same* keys to the same levels
+    (both derive from tower_height)."""
+    from repro.core.pmem import PMem
+    from repro.core.policies import get_policy
+    from repro.core.skiplist import SkipList
+    from repro.core.traversal import run_operation
+    mem = PMem(4096)
+    sl = SkipList(mem, max_level=8)
+    pol = get_policy("nvtraverse")
+    keys = [3, 17, 29, 41, 53, 65, 77, 89, 101]
+    for k in keys:
+        assert run_operation(sl, pol, "insert", (k, k * 2))
+    for k in (29, 65):
+        assert run_operation(sl, pol, "delete", (k,))
+    sl.rebuild_index()
+    live = [k for k in keys if k not in (29, 65)]
+    # mirror the live set into the ordered engine
+    stt = make_ordered(64)
+    ks = np.asarray(live, np.int32)
+    stt, ok, _ = update_parallel_ordered(
+        stt, np.zeros(len(live), np.int32), ks, 2 * ks)
+    assert np.asarray(ok).all()
+    tw = build_towers(stt)
+    for lvl in range(2, 9):
+        seed_keys = [k for k, _ in sl.index[lvl]]
+        row = np.asarray(tw.keys[lvl - 2])
+        eng_keys = [int(row[i]) for i in range(len(seed_keys))]
+        assert eng_keys == seed_keys, f"level {lvl} promotion differs"
+        assert (row[len(seed_keys):] == O.KEY_PAD).all()
+    # the seed rebuild is itself stable (sorted_snapshot path)
+    before = {l: list(v) for l, v in sl.index.items()}
+    sl.rebuild_index()
+    assert sl.index == before
+
+
+# --------------------------------------------------------------------- #
+# acceptance: 20k-op mixed stream (slow lane)                            #
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_acceptance_20k_mixed_stream_bit_identical():
+    rng = np.random.default_rng(1)
+    cap = 16_384
+    st_p, st_s, model = make_ordered(cap), make_ordered(cap), {}
+    n_ops = 0
+    while n_ops < 20_000:
+        n = 512
+        ops = rng.integers(0, 2, n).astype(np.int32)
+        ks = (rng.zipf(1.2, n) % 8000).astype(np.int32)
+        vs = rng.integers(0, 10_000, n).astype(np.int32)
+        st_p, ok_p, _ = update_parallel_ordered(st_p, ops, ks, vs)
+        st_s, ok_s = apply_ordered(st_s, jnp.asarray(ops),
+                                   jnp.asarray(ks), jnp.asarray(vs))
+        ok_m = oracle_apply(model, ops, ks, vs, capacity=cap)
+        np.testing.assert_array_equal(np.asarray(ok_p), np.asarray(ok_s))
+        np.testing.assert_array_equal(np.asarray(ok_p),
+                                      np.asarray(ok_m, bool))
+        n_ops += n
+    assert_states_equal(st_p, st_s, "20k stream")
+    assert items_host(st_p) == model
+    check_sorted(st_p)
+    for lo, hi in [(0, 7999), (100, 200), (4000, 4100)]:
+        want = oracle_range(model, lo, hi)
+        total, rk, rv = range_query(st_p, lo, hi, 8192)
+        assert int(total) == len(want)
+        assert list(zip(np.asarray(rk)[:len(want)].tolist(),
+                        np.asarray(rv)[:len(want)].tolist())) == want

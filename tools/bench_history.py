@@ -43,6 +43,10 @@ SCALARS = [
     ("insert.speedup", "higher"),
     ("mixed.*.parallel_us_per_op", "lower"),
     ("mixed.*.speedup", "higher"),
+    ("ordered.parallel_us_per_op", "lower"),
+    ("ordered.speedup", "higher"),
+    ("ordered.range.us_per_query", "lower"),
+    ("ordered.top_k.us_per_call", "lower"),
     ("restart.flat_ratio_snap", "lower"),
     ("restart.growth_ratio_nosnap", "higher"),
     ("obs.overhead.ratio", "lower"),

@@ -34,6 +34,8 @@ CODE_RE = re.compile(
 
 DOCTEST_MODULES = [
     "repro.core.batched",
+    "repro.core.ordered",
+    "repro.core.skiplist",
     "repro.core.sharded",
     "repro.core.migrate",
     "repro.core.rebalance",

@@ -1,4 +1,4 @@
-"""Crash-fault-injection sweep over the five durable-layer scenarios.
+"""Crash-fault-injection sweep over the six durable-layer scenarios.
 
 Drives :mod:`repro.robustness.faultinject`: for each selected layer the
 scenario is run once crash-free to enumerate every persistence site

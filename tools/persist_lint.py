@@ -9,7 +9,7 @@ any unwaived static violation or any fatal trace violation:
     `# persistlint: waive(<rule>) — <why>` annotations honored and
     counted).
   * --trace  : record the full persistence-instruction stream of the
-    five durable-layer faultinject scenarios in no-crash mode and
+    six durable-layer faultinject scenarios in no-crash mode and
     replay it against the ordering rules (missing-flush,
     publish-before-persist, traversal-phase-persistence fatal;
     redundant-flush / fence-with-nothing-pending reported non-fatal).
